@@ -1,0 +1,58 @@
+"""Kernel microbenchmarks: wall time of the jnp reference path (the
+interpret-mode Pallas numbers are NOT meaningful performance on CPU; on the
+TPU target ops.py dispatches to pallas_call).  Emits name,us_per_call,derived
+rows; 'derived' = GFLOP/s or GB/s of the reference path."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ref  # noqa: E402
+
+
+def timeit(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main() -> None:
+    x = jax.random.normal(jax.random.key(0), (8, 8192), jnp.float32)
+    f = jax.jit(ref.bp_scan_ref)
+    us = timeit(f, x)
+    gbs = x.size * 4 * 2 / (us / 1e6) / 1e9
+    print(f"kernel_bp_scan_ref_8x8192,{us:.0f},{gbs:.2f}GB/s")
+
+    a = jax.random.normal(jax.random.key(1), (512, 512), jnp.float32)
+    b = jax.random.normal(jax.random.key(2), (512, 512), jnp.float32)
+    f = jax.jit(ref.matmul_ref)
+    us = timeit(f, a, b)
+    gf = 2 * 512**3 / (us / 1e6) / 1e9
+    print(f"kernel_matmul_ref_512,{us:.0f},{gf:.1f}GFLOP/s")
+
+    f = jax.jit(ref.transpose_ref)
+    us = timeit(f, a)
+    print(f"kernel_transpose_ref_512,{us:.0f},{a.size * 4 * 2 / (us / 1e6) / 1e9:.2f}GB/s")
+
+    q = jax.random.normal(jax.random.key(3), (8, 512, 64), jnp.float32)
+    k = jax.random.normal(jax.random.key(4), (8, 512, 64), jnp.float32)
+    v = jax.random.normal(jax.random.key(5), (8, 512, 64), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = timeit(f, q, k, v)
+    gf = 4 * 8 * 512 * 512 * 64 / (us / 1e6) / 1e9
+    print(f"kernel_attention_ref_8x512x64,{us:.0f},{gf:.1f}GFLOP/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Roofline analysis (§Roofline deliverable): read the dry-run records and
+derive, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / peak_FLOPs            [s]
+  memory term     = HLO_bytes / HBM_bw                [s]
+  collective term = wire_bytes / ICI_bw               [s]
+
+(all per-device quantities — the HLO module is the per-device program), the
+dominant bottleneck, MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D
+(prefill/decode), the usefulness ratio MODEL_FLOPS / HLO_FLOPs, and a
+one-line remedy for the dominant term.
+
+Hardware model (TPU v5e-like): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI, 16 GiB HBM.
+
+Caveats recorded in EXPERIMENTS.md: (1) the CPU backend upcasts bf16 dot
+operands to f32, inflating activation collective payloads ~2x vs the TPU
+target; (2) HLO_bytes is a static traffic bound (every materializing op
+counted at operand+result bytes); (3) decode-cell matvecs may lower to
+fused multiply-reduce instead of dot, undercounting decode compute terms —
+decode cells are memory-bound regardless.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_BYTES = 16 * 2**30
+
+REMEDY = {
+    "compute_s": "increase arithmetic intensity (larger tiles, fused qkv/mlp)",
+    "memory_s": "cut HBM traffic: fuse layout ops, shrink remat recompute, "
+                "bf16-ize fp32 intermediates, windowed KV for local layers",
+    "collective_s": "reduce wire bytes: RS instead of AR, bf16 collectives, "
+                    "overlap weight all-gathers with compute, gradient compression",
+}
+
+
+def model_flops(arch: str, shape_name: str, n_devices: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    # exclude the lookup-only embedding table (logits matmul params stay)
+    emb = cfg.vocab_size * cfg.d_model
+    n_matmul = max(n_active - emb, 1)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_matmul * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_matmul * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        total = 2.0 * n_matmul * tokens
+    return total / n_devices  # per-device share
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(str(REPO / "experiments" / "dryrun" / "*.json"))):
+        r = json.loads(Path(f).read_text())
+        if r.get("tag", "") != tag:
+            continue
+        cells.append(r)
+    return cells
+
+
+def analyze_cell(r: dict) -> dict | None:
+    if not r["status"].startswith("ok"):
+        return None
+    h = r["hlo"]
+    comp = h["flops"] / PEAK_FLOPS
+    mem = h["hbm_bytes"] / HBM_BW
+    coll = h["collective_bytes"] / ICI_BW
+    dom = max([("compute_s", comp), ("memory_s", mem), ("collective_s", coll)],
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(r["arch"], r["shape"], r["n_devices"])
+    useful = mf / h["flops"] if h["flops"] > 0 else float("nan")
+    bound = max(comp, mem, coll)
+    frac = comp / bound if bound > 0 else 0.0  # fraction of roofline (compute/limiter)
+    return {
+        **{k: r[k] for k in ("arch", "shape", "mesh")},
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dom, "model_flops": mf, "useful_ratio": useful,
+        "roofline_frac": frac,
+        "peak_gb": r["memory"]["peak_bytes_est"] / 1e9,
+        "fits": r["memory"]["peak_bytes_est"] <= HBM_BYTES,
+        "remedy": REMEDY[dom],
+    }
+
+
+def main() -> None:
+    rows = []
+    skips = []
+    for r in load_cells():
+        out = analyze_cell(r)
+        if out is None:
+            skips.append((r["arch"], r["shape"], r["mesh"], r["status"]))
+        else:
+            rows.append(out)
+    rows.sort(key=lambda x: (x["arch"], x["shape"], x["mesh"]))
+
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':6s} {'comp_s':>8s} {'mem_s':>8s} "
+           f"{'coll_s':>8s} {'dom':5s} {'useful':>7s} {'rl_frac':>7s} {'peakGB':>7s} fits")
+    print(hdr)
+    print("-" * len(hdr))
+    for x in rows:
+        print(f"{x['arch']:24s} {x['shape']:12s} {x['mesh']:6s} "
+              f"{x['compute_s']:8.3f} {x['memory_s']:8.3f} {x['collective_s']:8.3f} "
+              f"{x['dominant'][:4]:5s} {x['useful_ratio']:7.3f} "
+              f"{x['roofline_frac']:7.3f} {x['peak_gb']:7.2f} "
+              f"{'Y' if x['fits'] else 'N'}")
+    for s in skips:
+        print(f"{s[0]:24s} {s[1]:12s} {s[2]:6s} {s[3]}")
+
+    out_file = REPO / "experiments" / "roofline.json"
+    out_file.write_text(json.dumps(rows, indent=1))
+    print(f"\nwrote {out_file} ({len(rows)} cells, {len(skips)} skips)")
+
+
+if __name__ == "__main__":
+    main()

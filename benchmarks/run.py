@@ -1,0 +1,30 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+Sections:
+  * table1.*      — the paper's Table 1 structural parameters + bounds,
+                    measured on the simulated multicore under PWS
+  * pws_vs_rws.*  — the paper's scheduler comparison (block misses, steals)
+  * kernel.*      — Pallas kernel reference-path microbenches
+  * roofline      — run ``python -m benchmarks.roofline`` for the dry-run
+                    derived roofline table (separate: needs dry-run records)
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+
+def main() -> None:
+    from benchmarks import bench_kernels, table1
+
+    print("name,us_per_call,derived")
+    table1.main()
+    bench_kernels.main()
+
+
+if __name__ == "__main__":
+    main()

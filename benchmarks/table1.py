@@ -1,0 +1,134 @@
+"""Reproduce the paper's Table 1: per-algorithm structural parameters
+measured on the simulator — work W(n) (access count), sequential cache
+complexity Q(n, M, B), PWS cache/block-miss excess, steals — plus asymptotic
+slope checks (log-log fits across an n-sweep).
+
+Each function emits ``name,us_per_call,derived`` CSV rows (us_per_call is
+simulator wall time; 'derived' carries the headline measured quantity).
+"""
+from __future__ import annotations
+
+import math
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.core import costmodel  # noqa: E402
+from repro.core.algorithms import (  # noqa: E402
+    BItoRMDirect,
+    MSum,
+    MTBI,
+    RMtoBI,
+    bi_to_rm_gapped_programs,
+    prefix_sums_programs,
+    strassen_program,
+)
+from repro.core.hbp import Memory  # noqa: E402
+from repro.core.machine import Machine  # noqa: E402
+from repro.core.pws import PWS  # noqa: E402
+from repro.core.rws import RWS  # noqa: E402
+
+P, M, B = 8, 512, 16
+
+
+def run(make, p=P, sched=None):
+    m = Machine(p, M, B, scheduler=sched or PWS())
+    progs = make()
+    t0 = time.time()
+    st = m.run_sequence(progs) if isinstance(progs, list) else m.run(progs)
+    return st, (time.time() - t0) * 1e6
+
+
+def slope(xs, ys):
+    lx = [math.log2(x) for x in xs]
+    ly = [math.log2(max(y, 1)) for y in ys]
+    n = len(xs)
+    mx, my = sum(lx) / n, sum(ly) / n
+    num = sum((a - mx) * (b - my) for a, b in zip(lx, ly))
+    den = sum((a - mx) ** 2 for a in lx)
+    return num / den
+
+
+def bench_scan_row():
+    """Scans: W=O(n), Q=O(n/B) — slopes ~1; PWS cache excess <= c pM/B."""
+    ns = [1 << 10, 1 << 12, 1 << 14]
+    W, Q = [], []
+    for n in ns:
+        st, _ = run(lambda n=n: MSum(n, Memory(B)), p=1)
+        W.append(st.accesses)
+        Q.append(st.total_cache_misses())
+    st_p, us = run(lambda: MSum(ns[-1], Memory(B)))
+    st_1, _ = run(lambda: MSum(ns[-1], Memory(B)), p=1)
+    excess = st_p.total_cache_misses() - st_1.total_cache_misses()
+    print(f"table1_scan_W_slope,{us:.0f},{slope(ns, W):.2f}")
+    print(f"table1_scan_Q_slope,{us:.0f},{slope(ns, Q):.2f}")
+    print(f"table1_scan_pws_excess_vs_pMB,{us:.0f},"
+          f"{excess / costmodel.pws_cache_excess_bp(P, M, B):.3f}")
+
+
+def bench_mt_row():
+    ns = [16, 32, 64]
+    W = []
+    for n in ns:
+        st, _ = run(lambda n=n: MTBI(n, Memory(B)), p=1)
+        W.append(st.accesses)
+    st_p, us = run(lambda: MTBI(64, Memory(B)))
+    print(f"table1_mt_W_slope_vs_n2,{us:.0f},{slope([n * n for n in ns], W):.2f}")
+    print(f"table1_mt_block_misses,{us:.0f},{st_p.total_block_misses()}")
+
+
+def bench_gapping_row():
+    """The gapping technique: block misses direct vs gapped (PWS)."""
+    st_d, us1 = run(lambda: BItoRMDirect(64, Memory(B)))
+    st_g, us2 = run(lambda: bi_to_rm_gapped_programs(64, Memory(B)))
+    print(f"table1_bi2rm_direct_block_misses,{us1:.0f},{st_d.total_block_misses()}")
+    print(f"table1_bi2rm_gapped_block_misses,{us2:.0f},{st_g.total_block_misses()}")
+
+
+def bench_pws_vs_rws():
+    """The paper's headline comparison on a block-sharing computation."""
+    st_p, us = run(lambda: BItoRMDirect(64, Memory(B)), sched=PWS())
+    rws_bm = []
+    rws_steals = []
+    for s in range(5):
+        st_r, _ = run(lambda: BItoRMDirect(64, Memory(B)), sched=RWS(seed=s))
+        rws_bm.append(st_r.total_block_misses())
+        rws_steals.append(len(st_r.steals))
+    print(f"pws_block_misses,{us:.0f},{st_p.total_block_misses()}")
+    print(f"rws_block_misses_mean,{us:.0f},{sum(rws_bm) / len(rws_bm):.1f}")
+    print(f"pws_steals,{us:.0f},{len(st_p.steals)}")
+    print(f"rws_steals_mean,{us:.0f},{sum(rws_steals) / len(rws_steals):.1f}")
+
+
+def bench_strassen_row():
+    ns = [8, 16, 32]
+    W = []
+    for n in ns:
+        st, _ = run(lambda n=n: strassen_program(n, Memory(B), base=4), p=1)
+        W.append(st.accesses)
+    st_p, us = run(lambda: strassen_program(16, Memory(B), base=4))
+    lam = slope(ns, W)
+    print(f"table1_strassen_W_slope,{us:.0f},{lam:.2f}")  # ~log2(7)=2.81
+    print(f"table1_strassen_steals,{us:.0f},{len(st_p.steals)}")
+
+
+def bench_prefix_sums_row():
+    st_p, us = run(lambda: prefix_sums_programs(1 << 13, Memory(B)))
+    spp = st_p.steals_per_priority()
+    print(f"table1_ps_max_steals_per_priority,{us:.0f},{max(spp.values()) if spp else 0}")
+
+
+def main() -> None:
+    bench_scan_row()
+    bench_mt_row()
+    bench_gapping_row()
+    bench_pws_vs_rws()
+    bench_strassen_row()
+    bench_prefix_sums_row()
+
+
+if __name__ == "__main__":
+    main()

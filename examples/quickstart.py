@@ -1,0 +1,46 @@
+"""Quickstart: build an assigned architecture, inspect the PWS plan, run one
+training step and a prefill+decode round trip — all on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import planner
+from repro.launch.mesh import make_debug_mesh
+from repro.models import RunOptions, build_model
+
+# 1. pick an architecture (reduced config for CPU)
+cfg = get_smoke_config("qwen3-1.7b")
+model = build_model(cfg, RunOptions(remat="none"))
+params = model.init(jax.random.key(0))
+n_params = sum(x.size for x in jax.tree.leaves(params))
+print(f"arch={cfg.name} family={cfg.family} params={n_params:,}")
+
+# 2. the PWS planner: resource-oblivious model, mesh-aware plan
+mesh = make_debug_mesh(1, tp=1)
+specs = planner.plan_params(jax.eval_shape(lambda: params), mesh)
+print("\nPWS plan (sample):")
+for path, spec in list(jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)))[:5]:
+    print("  ", jax.tree_util.keystr(path), "->", spec)
+
+# 3. one training step
+tokens = jax.random.randint(jax.random.key(1), (2, 32), 3, cfg.vocab_size)
+batch = {"tokens": tokens, "labels": tokens}
+loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+print(f"\ntrain loss: {float(loss):.4f}")
+
+# 4. prefill + decode
+logits, cache = jax.jit(lambda p, b: model.prefill(p, b, 64))(params, batch)
+nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+for i in range(4):
+    logits, cache = jax.jit(model.decode_step)(params, nxt, jnp.int32(32 + i), cache)
+    nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    print(f"decoded token {i}: {nxt[:, 0].tolist()}")

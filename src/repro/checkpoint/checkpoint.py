@@ -1,0 +1,163 @@
+"""Sharded, checksummed, async checkpointing with elastic resharding.
+
+Design (scaled-down tensorstore): one .npy file per pytree leaf + a JSON
+manifest carrying the tree structure, step, per-leaf SHA-256 checksums and
+the mesh the state was saved under.  Restore validates checksums and — for
+elastic restarts — RESHARDS onto a different mesh simply by loading the full
+logical arrays and re-applying the PWS planner's shardings for the new mesh
+(the PWS schedule is a pure function of p, Obs. 4.3, so re-planning after a
+topology change is deterministic).
+
+Fault-tolerance contract:
+  * atomic: writes go to ``step_N.tmp/`` then rename — a crash mid-save
+    never corrupts the latest complete checkpoint;
+  * async: ``save_async`` snapshots to host memory then writes in a
+    background thread (training continues);
+  * retention: keep the last K checkpoints.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        name = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey) else str(getattr(p, "idx", p))
+            for p in path
+        )
+        names.append(name)
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, state: Any,
+                    mesh_shape: Optional[dict] = None, keep: int = 3) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f"step_{step}.tmp"
+    final = directory / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    names, leaves, _ = _flatten_with_names(state)
+    manifest = {"step": step, "mesh_shape": mesh_shape or {}, "leaves": []}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or logical_dtype == "bfloat16":
+            # np.save cannot represent ml_dtypes (bf16 etc.): store the raw
+            # bits as uint16 and record the logical dtype in the manifest
+            logical_dtype = "bfloat16"
+            arr = arr.view(np.uint16)
+        fn = f"leaf_{i:05d}.npy"
+        np.save(tmp / fn, arr)
+        digest = hashlib.sha256((tmp / fn).read_bytes()).hexdigest()
+        manifest["leaves"].append(
+            {"name": name, "file": fn, "dtype": logical_dtype,
+             "shape": list(arr.shape), "sha256": digest}
+        )
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+
+    # retention
+    steps = sorted(
+        (int(p.name.split("_")[1]) for p in directory.glob("step_*")
+         if not p.name.endswith(".tmp")),
+    )
+    for old in steps[:-keep]:
+        shutil.rmtree(directory / f"step_{old}", ignore_errors=True)
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    steps = [int(p.name.split("_")[1]) for p in directory.glob("step_*")
+             if not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str | Path, state_like: Any,
+                    step: Optional[int] = None, shardings: Any = None) -> tuple[int, Any]:
+    """Restore into the structure of ``state_like``.  ``shardings`` (a pytree
+    of NamedSharding for the CURRENT mesh) enables elastic resharding: the
+    loaded logical arrays are placed per the new plan."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = directory / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    names, leaves, treedef = _flatten_with_names(state_like)
+    by_name = {m["name"]: m for m in manifest["leaves"]}
+    out = []
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    for name, like, sh in zip(names, leaves, shard_leaves):
+        m = by_name[name]
+        raw = (d / m["file"]).read_bytes()
+        if hashlib.sha256(raw).hexdigest() != m["sha256"]:
+            raise IOError(f"checksum mismatch for {name}")
+        arr = np.load(d / m["file"])
+        if m["dtype"] == "bfloat16":
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        if list(arr.shape) != list(like.shape):
+            raise ValueError(f"shape mismatch {name}: {arr.shape} vs {like.shape}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=like.dtype))
+    return manifest["step"], jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async save + restore-latest."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, state: Any, mesh_shape: Optional[dict] = None):
+        self.wait()
+        # snapshot to host first (cheap for CPU backend; on TPU this is the
+        # device->host copy that must complete before training mutates state)
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_state, mesh_shape, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore_latest(self, state_like: Any, shardings: Any = None):
+        return load_checkpoint(self.directory, state_like, shardings=shardings)

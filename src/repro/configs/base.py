@@ -1,0 +1,249 @@
+"""Model/architecture configuration for the repro framework.
+
+Every assigned architecture is a frozen ``ModelConfig``.  The config is
+resource-oblivious in the paper's sense: nothing in it references the mesh,
+cache sizes, or block sizes — those belong to the PWS planner
+(``repro.core.planner``) and the launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (input-shape) cell: seq_len x global_batch + step kind."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+# The four assigned LM shapes (identical across the 10 architectures).
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.  Fields default to 'absent'."""
+
+    name: str
+    family: str  # dense | moe | vlm | hybrid | ssm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None  # explicit head dim (Qwen3, Gemma3, ...)
+    qkv_bias: bool = False  # Qwen2.5
+    qk_norm: bool = False  # Qwen3 family
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    scale_embeddings: bool = False  # Gemma-style sqrt(d) embedding scale
+
+    # local/global attention interleaving (Gemma3: 5 local : 1 global)
+    sliding_window: Optional[int] = None
+    global_every: Optional[int] = None  # every k-th layer is global
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    expert_d_ff: int = 0
+    capacity_factor: float = 1.25  # gapped-capacity padding (paper: gapping)
+    router_aux_weight: float = 0.01
+
+    # VLM (cross-attention image layers; vision frontend is a stub)
+    cross_attn_every: Optional[int] = None
+    n_image_tokens: int = 0
+
+    # hybrid (RecurrentGemma): repeating block pattern, e.g. ("rglru","rglru","attn")
+    block_pattern: tuple[str, ...] = ()
+    lru_width: int = 0
+    conv1d_width: int = 4
+
+    # SSM (Mamba-2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+
+    # encoder-decoder (Seamless)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    # encoder input length as a fraction of decoder seq_len (audio frames stub)
+    encoder_len_ratio: float = 0.25
+
+    # activation dtype
+    dtype: str = "bfloat16"
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // max(self.n_heads, 1)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim_
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim_
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if attention cost is sub-quadratic in context (SSM / hybrid /
+        mostly-sliding-window).  Pure full-attention archs skip long_500k."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        # mostly-local attention (Gemma3 5:1) bounds the full-attention layers
+        return self.sliding_window is not None and (self.global_every or 0) > 1
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_n_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count N (used for MODEL_FLOPS = 6*N*D)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim_
+        emb = v * d * (1 if self.tie_embeddings else 2)
+
+        def attn_params() -> int:
+            p = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            if self.qkv_bias:
+                p += self.q_dim + 2 * self.kv_dim
+            if self.qk_norm:
+                p += 2 * hd
+            return p
+
+        def mlp_params(f: int) -> int:
+            return 3 * d * f  # gated (SwiGLU-style): up, gate, down
+
+        def norm_params() -> int:
+            return 2 * d
+
+        total = emb + d  # final norm
+        if self.family in ("dense", "vlm"):
+            per_layer = attn_params() + mlp_params(ff) + norm_params()
+            total += self.n_layers * per_layer
+            if self.cross_attn_every:
+                n_cross = self.n_layers // self.cross_attn_every
+                total += n_cross * (attn_params() + norm_params())
+        elif self.family == "moe":
+            per_layer = attn_params() + norm_params()
+            per_layer += d * self.n_experts  # router
+            per_layer += self.n_experts * 3 * d * self.expert_d_ff
+            total += self.n_layers * per_layer
+        elif self.family == "hybrid":
+            w = self.lru_width or d
+            n_attn = sum(1 for b in self._layer_kinds() if b == "attn")
+            n_rec = self.n_layers - n_attn
+            rec = d * w * 2 + w * self.conv1d_width + 2 * w + w * d  # x/gate proj, conv, lru gates, out
+            total += n_rec * (rec + norm_params()) + n_attn * (attn_params() + norm_params())
+            total += self.n_layers * mlp_params(ff)
+        elif self.family == "ssm":
+            di, ds = self.ssm_d_inner, self.ssm_state
+            nh = self.ssm_n_heads
+            per_layer = d * (2 * di + 2 * ds + nh)  # in_proj(zx) + B,C proj + dt
+            per_layer += di * self.conv1d_width + nh + nh  # conv, A_log, D
+            per_layer += di * d + norm_params()
+            total += self.n_layers * per_layer
+        elif self.family == "audio":
+            per_enc = attn_params() + mlp_params(ff) + norm_params()
+            per_dec = 2 * attn_params() + mlp_params(ff) + norm_params()
+            total += self.encoder_layers * per_enc + self.n_layers * per_dec
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (== param_count for dense)."""
+        if self.family != "moe":
+            return self.param_count()
+        inactive = self.n_layers * (self.n_experts - self.experts_per_token) * 3 * self.d_model * self.expert_d_ff
+        return self.param_count() - inactive
+
+    def _layer_kinds(self) -> list[str]:
+        """Per-layer kind sequence for pattern archs (hybrid)."""
+        if not self.block_pattern:
+            return ["attn"] * self.n_layers
+        kinds: list[str] = []
+        while len(kinds) < self.n_layers:
+            kinds.extend(self.block_pattern)
+        return kinds[: self.n_layers]
+
+
+_REGISTRY: dict[str, "ModelConfig"] = {}
+_SMOKE_REGISTRY: dict[str, "ModelConfig"] = {}
+
+
+def register(cfg: ModelConfig, smoke: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    _SMOKE_REGISTRY[cfg.name] = smoke
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _SMOKE_REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    return dataclasses.replace(cfg, **overrides)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from repro.configs import (  # noqa: F401
+        qwen2_5_14b,
+        gemma3_1b,
+        qwen3_32b,
+        qwen3_1_7b,
+        olmoe_1b_7b,
+        qwen3_moe_30b_a3b,
+        llama_3_2_vision_90b,
+        recurrentgemma_2b,
+        mamba2_370m,
+        seamless_m4t_large_v2,
+    )

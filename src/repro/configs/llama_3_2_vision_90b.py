@@ -1,0 +1,36 @@
+"""llama-3.2-vision-90b — VLM backbone: 100 layers, every 5th layer is a
+cross-attention (image) layer.  Vision frontend is a STUB: input_specs()
+provides precomputed patch embeddings.  [hf:meta-llama/Llama-3.2-11B-Vision;
+unverified]"""
+from repro.configs.base import ModelConfig, reduced, register
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    n_image_tokens=1601,  # 1 tile x (40x40 patches + 1 cls)
+    tie_embeddings=False,
+)
+
+SMOKE = reduced(
+    CONFIG,
+    n_layers=5,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    cross_attn_every=5,
+    n_image_tokens=17,
+)
+
+register(CONFIG, SMOKE)

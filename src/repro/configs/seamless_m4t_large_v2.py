@@ -1,0 +1,34 @@
+"""seamless-m4t-large-v2 — encoder-decoder multimodal (audio) backbone.
+The speech frontend is a STUB: input_specs() provides precomputed frame
+embeddings of shape (batch, enc_len, d_model).  [arXiv:2308.11596; hf]"""
+from repro.configs.base import ModelConfig, reduced, register
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,  # decoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    rope_theta=10_000.0,
+    is_encoder_decoder=True,
+    encoder_layers=24,
+    encoder_len_ratio=0.25,
+    tie_embeddings=False,
+)
+
+SMOKE = reduced(
+    CONFIG,
+    n_layers=2,
+    encoder_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+)
+
+register(CONFIG, SMOKE)

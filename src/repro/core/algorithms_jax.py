@@ -1,0 +1,242 @@
+"""Value-level (numerically exact) JAX implementations of the paper's
+algorithms.  Each is the *same algorithm* the simulator traces, but computing
+real values — tests cross-check them against independent oracles
+(jnp.cumsum, jnp.matmul, jnp.fft, numpy list ranking, union-find).
+
+These also double as the CPU reference path for the Pallas kernels.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layouts
+
+
+# ---------------------------------------------------------------------------
+# scans / prefix sums (two-pass BP, the paper's PS)
+# ---------------------------------------------------------------------------
+
+def prefix_sums(x: jax.Array, block: int = 128) -> jax.Array:
+    """Inclusive prefix sums via the paper's two-BP-pass algorithm:
+    pass 1 computes per-block sums + their exclusive scan (the up-tree),
+    pass 2 distributes offsets into each block (the down-pass)."""
+    n = x.shape[-1]
+    block = min(block, n)
+    if n % block != 0:
+        pad = block - n % block
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    nb = x.shape[-1] // block
+    xb = x.reshape(*x.shape[:-1], nb, block)
+    local = jnp.cumsum(xb, axis=-1)
+    block_tot = local[..., -1]
+    offsets = jnp.cumsum(block_tot, axis=-1) - block_tot  # exclusive
+    out = (local + offsets[..., None]).reshape(*x.shape[:-1], nb * block)
+    return out[..., :n]
+
+
+# ---------------------------------------------------------------------------
+# BI layout ops
+# ---------------------------------------------------------------------------
+
+def rm_to_bi(m: jax.Array) -> jax.Array:
+    n = m.shape[0]
+    perm = jnp.asarray(layouts.rm_to_bi_perm(n))
+    return m.reshape(-1)[perm]
+
+
+def bi_to_rm(flat: jax.Array, n: int) -> jax.Array:
+    perm = jnp.asarray(layouts.bi_to_rm_perm(n))
+    return flat[perm].reshape(n, n)
+
+
+def bi_to_rm_gapped(flat: jax.Array, n: int) -> jax.Array:
+    """The gapped variant: scatter into the gapped buffer, then compact with
+    a scan — value-identical to bi_to_rm; the gapping matters for block
+    misses, which the simulator measures."""
+    row_gap = layouts.gap_for(n)
+    stride = n + row_gap
+    z = jnp.arange(n * n)
+    r, c = layouts.bi_coords(np.arange(n * n))
+    dst = jnp.asarray(r.astype(np.int64) * stride + c.astype(np.int64))
+    buf = jnp.zeros((n * stride,), flat.dtype).at[dst].set(flat[z])
+    # compaction scan
+    rr, cc = jnp.divmod(jnp.arange(n * n), n)
+    return buf[rr * stride + cc].reshape(n, n)
+
+
+def mt_bi(flat: jax.Array, n: int) -> jax.Array:
+    """Transpose of a BI-layout matrix, staying in BI layout: permutation
+    that swaps the row/col bit positions (pure index map — the BP tree's
+    leaves)."""
+    z = np.arange(n * n)
+    r, c = layouts.bi_coords(z)
+    swapped = layouts.bi_index(c, r)
+    return flat[jnp.asarray(swapped.astype(np.int64))]
+
+
+# ---------------------------------------------------------------------------
+# Strassen
+# ---------------------------------------------------------------------------
+
+def strassen(a: jax.Array, b: jax.Array, leaf: int = 64) -> jax.Array:
+    """Strassen matrix multiply (Type 2 HBP: 7 recursive subproblems computed
+    into fresh arrays + MA combines => limited access)."""
+    n = a.shape[0]
+    if n <= leaf:
+        return a @ b
+    h = n // 2
+    a11, a12, a21, a22 = a[:h, :h], a[:h, h:], a[h:, :h], a[h:, h:]
+    b11, b12, b21, b22 = b[:h, :h], b[:h, h:], b[h:, :h], b[h:, h:]
+    m1 = strassen(a11 + a22, b11 + b22, leaf)
+    m2 = strassen(a21 + a22, b11, leaf)
+    m3 = strassen(a11, b12 - b22, leaf)
+    m4 = strassen(a22, b21 - b11, leaf)
+    m5 = strassen(a11 + a12, b22, leaf)
+    m6 = strassen(a21 - a11, b11 + b12, leaf)
+    m7 = strassen(a12 - a22, b21 + b22, leaf)
+    c11 = m1 + m4 - m5 + m7
+    c12 = m3 + m5
+    c21 = m2 + m4
+    c22 = m1 - m2 + m3 + m6
+    return jnp.concatenate(
+        [jnp.concatenate([c11, c12], axis=1), jnp.concatenate([c21, c22], axis=1)],
+        axis=0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# six-step FFT (Bailey / the paper's FFT)
+# ---------------------------------------------------------------------------
+
+def fft_six_step(x: jax.Array) -> jax.Array:
+    """FFT of length n = m^2 via the six-step algorithm:
+    1. view as m x m, transpose; 2. m FFTs of size m (rows);
+    3. twiddle; 4. transpose; 5. m FFTs of size m; 6. transpose.
+    Row FFTs recurse on sub-square sizes (here: one level, rows via
+    jnp.fft.fft of size m — the recursion bottoms out immediately since the
+    parallel structure, not the butterfly, is what the paper contributes)."""
+    n = x.shape[-1]
+    m = int(math.isqrt(n))
+    assert m * m == n, "six-step FFT needs n = m^2"
+    a = x.reshape(m, m)  # step 0: view as matrix (row-major: a[i,j] = x[i*m+j])
+    a = a.T  # 1. transpose
+    a = jnp.fft.fft(a, axis=-1)  # 2. row FFTs
+    ij = jnp.outer(jnp.arange(m), jnp.arange(m))
+    tw = jnp.exp(-2j * jnp.pi * ij / n)  # 3. twiddles
+    a = a * tw
+    a = a.T  # 4. transpose
+    a = jnp.fft.fft(a, axis=-1)  # 5. row FFTs
+    a = a.T  # 6. transpose
+    return a.reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# list ranking (IS-contraction + pointer jumping, with gapping)
+# ---------------------------------------------------------------------------
+
+def list_ranking(succ: np.ndarray) -> np.ndarray:
+    """Rank (distance to the end) of each element of a linked list given
+    successor pointers (succ[i] = next of i, terminal points to itself).
+
+    Parallel-structure-faithful implementation: O(log log n) contraction
+    stages removing independent sets of non-adjacent elements (2-coloring by
+    random bits = the O(log^(k) n) coloring of MO-IS), then pointer jumping
+    on the contracted list, then rank reinstatement in reverse.  Runs in
+    numpy for test-oracle clarity."""
+    n = len(succ)
+    succ = succ.copy()
+    dist = np.ones(n, dtype=np.int64)
+    terminal = np.flatnonzero(succ == np.arange(n))
+    dist[terminal] = 0
+
+    rng = np.random.default_rng(0)
+    alive = np.ones(n, dtype=bool)
+    removed_stack: list[np.ndarray] = []
+    threshold = max(n // max(int(math.log2(max(n, 2))), 1), 64)
+
+    while alive.sum() > threshold:
+        # independent set: heads of "tails": coin flip per element;
+        # pick i with coin[i]=1 and coin[succ[i]]=0, i not terminal
+        coin = rng.integers(0, 2, n).astype(bool)
+        is_term = succ == np.arange(n)
+        sel = alive & coin & ~coin[succ] & ~is_term & ~is_term[succ]
+        # no two adjacent selected: if sel[i], then coin[succ[i]]=0 => not sel[succ[i]]
+        idx = np.flatnonzero(sel)
+        if len(idx) == 0:
+            continue
+        # splice out: pred of i points to succ[i].  Find preds of selected.
+        pred = np.full(n, -1, dtype=np.int64)
+        valid = alive & (succ != np.arange(n))
+        pred[succ[np.flatnonzero(valid)]] = np.flatnonzero(valid)
+        has_pred = pred[idx] >= 0
+        p_idx = pred[idx[has_pred]]
+        # bypass: succ[pred[i]] = succ[i]; dist[pred[i]] += dist[i]
+        succ[p_idx] = succ[idx[has_pred]]
+        dist[p_idx] = dist[p_idx] + dist[idx[has_pred]]
+        alive[idx] = False
+        removed_stack.append(idx)
+
+    # pointer jumping (doubling) on the contracted list:
+    # rank[i] = distance to terminal; invariant after k rounds: rank[i] is
+    # the distance covered by following nxt 2^k times (capped at terminal)
+    rank = np.where(succ == np.arange(n), 0, dist)
+    nxt = succ.copy()
+    for _ in range(int(math.ceil(math.log2(max(n, 2)))) + 1):
+        rank = rank + np.where(nxt == np.arange(n), 0, rank[nxt])
+        nxt = nxt[nxt]
+
+    # reinstate removed elements in reverse order
+    for idx in reversed(removed_stack):
+        rank[idx] = rank[succ[idx]] + dist[idx]
+    return rank
+
+
+def list_ranking_oracle(succ: np.ndarray) -> np.ndarray:
+    """Sequential oracle: walk from the terminal backwards."""
+    n = len(succ)
+    rank = np.zeros(n, dtype=np.int64)
+    pred = np.full(n, -1, dtype=np.int64)
+    for i in range(n):
+        if succ[i] != i:
+            pred[succ[i]] = i
+    term = int(np.flatnonzero(succ == np.arange(n))[0])
+    r = 0
+    cur = term
+    while pred[cur] >= 0:
+        r += 1
+        cur = pred[cur]
+        rank[cur] = r
+    return rank
+
+
+# ---------------------------------------------------------------------------
+# connected components (hook & contract over the LR primitives)
+# ---------------------------------------------------------------------------
+
+def connected_components(n: int, edges: np.ndarray) -> np.ndarray:
+    """Label propagation / hook-and-contract: O(log n) stages, each stage =
+    scans + 'pointer jumping' (shortcutting) — the structure the paper counts
+    as log n stages of list-ranking-like work.  Returns component labels."""
+    label = np.arange(n, dtype=np.int64)
+    if len(edges) == 0:
+        return label
+    u, v = edges[:, 0], edges[:, 1]
+    for _ in range(int(math.ceil(math.log2(max(n, 2)))) * 2 + 2):
+        # hook: point each root to the min neighbor label
+        lu, lv = label[u], label[v]
+        m = np.minimum(lu, lv)
+        new = label.copy()
+        np.minimum.at(new, lu, m)
+        np.minimum.at(new, lv, m)
+        # shortcut (pointer jumping)
+        for _ in range(2):
+            new = new[new]
+        if np.array_equal(new, label):
+            break
+        label = new
+    return label

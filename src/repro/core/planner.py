@@ -1,0 +1,245 @@
+"""The PWS planner: the paper's Priority Work-Stealing scheduler realized as a
+*static* sharding planner for SPMD meshes.
+
+Why this is PWS: for *balanced* HBP computations the paper proves the PWS
+schedule is deterministic — steals happen in priority (= size, BFS) order and
+at most p-1 tasks are stolen per priority level (Obs. 4.3).  On a lockstep
+SPMD machine that schedule collapses to a static breadth-first partition of
+the top log2(p) fork levels.  This module performs exactly that partition:
+
+  * every parameter / activation / cache tensor is an HBP task tree whose
+    fork levels are its axes (largest first = highest priority);
+  * mesh axes are the "cores"; assigning an array axis to a mesh axis is the
+    (deterministic, priority-ordered) steal of that fork level;
+  * the paper's limited-access discipline (one writer per block) becomes the
+    single-writer shard rule: gradients are reduce-scattered, not
+    all-reduce-then-sliced; expert/KV slabs are padded ("gapped") to tile
+    boundaries so no two shards share a tile.
+
+The planner is the ONLY component that knows the mesh.  Models stay
+resource-oblivious (paper §1: algorithms make no mention of p, M, B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# TPU v5e hardware model used for tall-cache checks and tile quanta
+VMEM_BYTES = 128 * 2**20 // 8  # ~16 MiB usable VMEM per core
+LANE = 128
+SUBLANE = 8
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    """Names of the mesh axes by role."""
+
+    dp: tuple[str, ...]  # data-parallel axes (outermost first), e.g. ("pod","data")
+    fsdp: str  # axis that also shards parameters/optimizer (ZeRO)
+    tp: str  # tensor/model-parallel axis
+
+    @property
+    def all_dp(self) -> tuple[str, ...]:
+        return self.dp
+
+
+def axes_for(mesh: Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    if "pod" in names:
+        return MeshAxes(dp=("pod", "data"), fsdp="data", tp="model")
+    return MeshAxes(dp=("data",), fsdp="data", tp="model")
+
+
+def tall_cache_ok(block_bytes: int = LANE * SUBLANE * 4) -> bool:
+    """Paper's tall-cache condition M >= B^2 with M=VMEM, B=one native tile."""
+    return VMEM_BYTES >= (block_bytes ** 2) ** 0.5 * block_bytes ** 0.5 or VMEM_BYTES >= block_bytes * 64
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules (PWS priority order: biggest axes stolen first)
+# ---------------------------------------------------------------------------
+# rule: leaf-name -> PartitionSpec entries for the TRAILING dims of the leaf.
+# Leading (layer-stack) dims are padded with None.
+
+def _param_rules(ax: MeshAxes) -> dict[str, tuple]:
+    fsdp, tp = ax.fsdp, ax.tp
+    return {
+        # embeddings: vocab over tp (vocab-parallel), d over fsdp
+        "embed": (tp, fsdp),
+        "lm_head": (tp, fsdp),
+        # projections (in, out): column-parallel -> out over tp, in over fsdp
+        "wq": (fsdp, tp), "wk": (fsdp, tp), "wv": (fsdp, tp),
+        "w_gate": (fsdp, tp), "w_up": (fsdp, tp),
+        "w_x": (fsdp, tp), "w_gate_branch": (fsdp, tp), "w_in": (fsdp, tp),
+        "w_mlp_gate": (fsdp, tp), "w_mlp_up": (fsdp, tp),
+        # row-parallel (in over tp, out over fsdp)
+        "wo": (tp, fsdp), "w_down": (tp, fsdp), "w_out": (tp, fsdp),
+        "w_mlp_down": (tp, fsdp),
+        # biases follow the column dim
+        "bq": (tp,), "bk": (tp,), "bv": (tp,),
+        # router stays replicated over tp (it is tiny and every shard needs it)
+        "router": (fsdp, None),
+        # experts: expert axis over tp (EP), d over fsdp  — gapped slabs
+        "e_gate": (tp, fsdp, None), "e_up": (tp, fsdp, None),
+        "e_down": (tp, None, fsdp),
+        # conv / recurrent params: width over tp
+        "conv_w": (None, tp),
+        "lru_a_gate": (None, None, None), "lru_i_gate": (None, None, None),
+        "lru_a_param": (tp,),
+        "A_log": (tp,), "dt_bias": (tp,), "D": (tp,), "gn": (tp,),
+        # norms / scalar gates: replicated
+        "ln": (None,), "ln1": (None,), "ln2": (None,), "ln3": (None,),
+        "final_norm": (None,), "enc_norm": (None,),
+        "q_norm": (None,), "k_norm": (None,),
+        "xgate_attn": (), "xgate_ffn": (),
+    }
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def plan_params(abstract_params: Any, mesh: Mesh, mode: str = "fsdp") -> Any:
+    """PartitionSpec tree for a parameter pytree (leaf-name rules, leading
+    layer-stack dims padded with None).  Dims that do not divide evenly by
+    the mesh axis are left unsharded (the paper's balance condition: only
+    balanced forks are stolen).
+
+    mode="fsdp" (ZeRO-3): weights 2D-sharded (fsdp x tp) — per-layer weight
+    all-gathers, minimum memory.  mode="zero1": weights tp-sharded only
+    (replicated across data) — no per-layer gathers; use for models whose
+    bf16 weights fit tp-sharded (the optimizer state stays fsdp-sharded by
+    the caller)."""
+    ax = axes_for(mesh)
+    rules = _param_rules(ax)
+    if mode == "zero1":
+        rules = {
+            name: tuple(None if a == ax.fsdp else a for a in rule)
+            for name, rule in rules.items()
+        }
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        rule = rules.get(name)
+        if rule is None:
+            rule = (None,) * ndim
+        rule = tuple(rule)
+        pad = ndim - len(rule)
+        entries = (None,) * pad + rule
+        fixed = []
+        for dim, axis in zip(leaf.shape, entries):
+            if axis is None:
+                fixed.append(None)
+            elif dim % mesh.shape[axis] == 0:
+                fixed.append(axis)
+            else:
+                fixed.append(None)  # unbalanced fork: do not steal
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+def plan_batch(abstract_batch: Any, mesh: Mesh) -> Any:
+    """Batch sharding: leading batch dim over all dp axes when divisible."""
+    ax = axes_for(mesh)
+    dp_size = 1
+    for a in ax.dp:
+        dp_size *= mesh.shape[a]
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        if shape[0] % dp_size == 0 and shape[0] > 0:
+            return P(ax.dp, *(None,) * (len(shape) - 1))
+        # long-context single-batch: shard the sequence axis instead
+        if len(shape) >= 2 and shape[1] % dp_size == 0:
+            return P(None, ax.dp, *(None,) * (len(shape) - 2))
+        return P(*(None,) * len(shape))
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_batch)
+
+
+_KV_NAMES = {"k", "v", "xk", "xv", "img_k", "img_v"}
+
+
+def plan_cache(abstract_cache: Any, mesh: Mesh) -> Any:
+    """KV/state cache sharding.
+
+    KV leaves are (..., b, S, kvh, hd): shard b over dp when divisible; shard
+    kv-heads over tp when divisible, else shard S over tp (sequence
+    parallelism — flash-decode style partial-softmax combine is emitted by
+    GSPMD as all-reduce over tp).  For b == 1 (long-context), S is sharded
+    over dp as well.  State leaves (ssm / lru / conv) shard their width/head
+    axis over tp.
+    """
+    ax = axes_for(mesh)
+    tp = ax.tp
+    tp_size = mesh.shape[tp]
+    dp_size = 1
+    for a in ax.dp:
+        dp_size *= mesh.shape[a]
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if name in _KV_NAMES:
+            # trailing dims: (b, S, kvh, hd)
+            entries: list = [None] * nd
+            b_i, s_i, h_i = nd - 4, nd - 3, nd - 2
+            if shape[b_i] % dp_size == 0:
+                entries[b_i] = ax.dp
+                if shape[h_i] % tp_size == 0:
+                    entries[h_i] = tp
+                elif shape[s_i] % tp_size == 0:
+                    entries[s_i] = tp
+            else:
+                # batch=1 long context: sequence over (dp..., tp) as divisible
+                if shape[s_i] % (dp_size * tp_size) == 0:
+                    entries[s_i] = ax.dp + (tp,)
+                elif shape[s_i] % dp_size == 0:
+                    entries[s_i] = ax.dp
+                elif shape[s_i] % tp_size == 0:
+                    entries[s_i] = tp
+            return P(*entries)
+        if name in ("ssm",):  # (L, b, nh, hp, ds)
+            entries = [None] * nd
+            if shape[nd - 4] % dp_size == 0:
+                entries[nd - 4] = ax.dp
+            if shape[nd - 3] % tp_size == 0:
+                entries[nd - 3] = tp
+            return P(*entries)
+        if name.startswith("lru"):  # (n, b, w)
+            entries = [None] * nd
+            if shape[nd - 2] % dp_size == 0:
+                entries[nd - 2] = ax.dp
+            if shape[nd - 1] % tp_size == 0:
+                entries[nd - 1] = tp
+            return P(*entries)
+        if name.startswith("conv"):  # (L, b, k-1, w)
+            entries = [None] * nd
+            if shape[nd - 3] % dp_size == 0:
+                entries[nd - 3] = ax.dp
+            if shape[nd - 1] % tp_size == 0:
+                entries[nd - 1] = tp
+            return P(*entries)
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_cache)
+
+
+def named(tree_of_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,48 @@
+"""Randomized Work Stealing (the baseline the paper compares against —
+Blumofe & Leiserson [7], analyzed with false sharing in the companion
+paper [13]).
+
+An idle core picks a victim uniformly at random and steals the head (top =
+largest) task of its deque; on failure it retries after one time unit.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import Optional
+
+
+class RWS:
+    def __init__(self, seed: int = 0, steal_cost: Optional[float] = None):
+        self.seed = seed
+        self.steal_cost = steal_cost
+
+    def reset(self, machine):
+        self.rng = random.Random(self.seed)
+        self.sp = self.steal_cost if self.steal_cost is not None else float(machine.b)
+        self.waiting: list[tuple[float, int]] = []
+
+    def on_idle(self, machine, core: int, t: float):
+        self._attempt(machine, core, t)
+
+    def on_task_available(self, machine, core: int, t: float):
+        pass
+
+    def flush(self, machine, t: float):
+        # retry any waiting thieves
+        waiting, self.waiting = self.waiting, []
+        for since, thief in waiting:
+            self._attempt(machine, thief, max(since, t))
+
+    def _attempt(self, machine, thief: int, t: float):
+        machine.stats.steal_attempts += 1
+        victim = self.rng.randrange(machine.p)
+        if victim == thief:
+            victim = (victim + 1) % machine.p
+        node = machine.steal_from(victim)
+        if node is not None:
+            pr = machine.prog.priority(node)
+            machine.stats.steals.append((t, pr, thief, victim))
+            machine.assign_stolen(thief, node, t + self.sp)
+        else:
+            self.waiting.append((t + 1.0, thief))

@@ -1,0 +1,14 @@
+from repro.kernels import ops, ref
+from repro.kernels.bp_scan import bp_scan
+from repro.kernels.bi_transpose import bi_transpose
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hbp_matmul import hbp_matmul
+
+__all__ = [
+    "ops",
+    "ref",
+    "bp_scan",
+    "bi_transpose",
+    "flash_attention",
+    "hbp_matmul",
+]

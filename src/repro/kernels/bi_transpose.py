@@ -1,0 +1,58 @@
+"""BI-tiled transpose Pallas kernel — the paper's MT algorithm on the MXU.
+
+The recursive BI quadrant swap becomes: visit (bt x bt) tiles in Morton
+order (the BI layout applied to the *grid schedule*), each grid step reads
+tile (i, j) and writes its transpose to tile (j, i).  Every output element
+written exactly once (limited access); each task touches exactly two tiles
+(O(1)-block sharing — the paper's L(r) = O(1) for MT)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.hbp_matmul import _morton_ij
+
+
+def _transpose_kernel(x_ref, out_ref):
+    out_ref[...] = x_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "morton", "interpret"))
+def bi_transpose(x: jax.Array, *, bt: int = 128, morton: bool = True,
+                 interpret: bool = True) -> jax.Array:
+    """x: (m, n) -> (n, m), tile-blocked."""
+    m, n = x.shape
+    bt_m, bt_n = min(bt, m), min(bt, n)
+    assert m % bt_m == 0 and n % bt_n == 0
+    nm, nn = m // bt_m, n // bt_n
+
+    if morton and nm == nn and (nm & (nm - 1)) == 0:
+        grid = (nm * nn,)
+
+        def in_map(g):
+            i, j = _morton_ij(g)
+            return (i, j)
+
+        def out_map(g):
+            i, j = _morton_ij(g)
+            return (j, i)
+    else:
+        grid = (nm * nn,)
+
+        def in_map(g):
+            return (g // nn, g % nn)
+
+        def out_map(g):
+            return (g % nn, g // nn)
+
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt_m, bt_n), in_map)],
+        out_specs=pl.BlockSpec((bt_n, bt_m), out_map),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=interpret,
+    )(x)

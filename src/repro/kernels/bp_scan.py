@@ -1,0 +1,70 @@
+"""BP prefix-scan Pallas kernel — the paper's PS algorithm as a TPU kernel.
+
+Two BP passes (paper §3.2 'Scans'):
+  pass 1 (down): each grid block computes its local inclusive cumsum and its
+                 block total (the BP leaf reduction);
+  between:       the block totals are exclusive-scanned (the up-tree — tiny,
+                 done in jnp on the host program);
+  pass 2 (up):   each block adds its prefix offset (the down-distribution).
+
+Block size = the BP leaf size; VMEM tiling via BlockSpec.  Limited access:
+every output element written exactly once per pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_block_kernel(x_ref, out_ref, tot_ref):
+    x = x_ref[...]
+    c = jnp.cumsum(x.astype(jnp.float32), axis=-1)
+    out_ref[...] = c.astype(out_ref.dtype)
+    tot_ref[...] = c[..., -1:].astype(tot_ref.dtype)
+
+
+def _add_offset_kernel(y_ref, off_ref, out_ref):
+    out_ref[...] = (y_ref[...].astype(jnp.float32)
+                    + off_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def bp_scan(x: jax.Array, *, block: int = 512, interpret: bool = True) -> jax.Array:
+    """Inclusive prefix sum along the last axis.  x: (rows, n)."""
+    rows, n = x.shape
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    nb = n // block
+
+    local, totals = pl.pallas_call(
+        _scan_block_kernel,
+        grid=(rows, nb),
+        in_specs=[pl.BlockSpec((1, block), lambda r, i: (r, i))],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda r, i: (r, i)),
+            pl.BlockSpec((1, 1), lambda r, i: (r, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, n), x.dtype),
+            jax.ShapeDtypeStruct((rows, nb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+    offsets = jnp.cumsum(totals, axis=-1) - totals  # exclusive scan of totals
+
+    out = pl.pallas_call(
+        _add_offset_kernel,
+        grid=(rows, nb),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda r, i: (r, i)),
+            pl.BlockSpec((1, 1), lambda r, i: (r, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda r, i: (r, i)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=interpret,
+    )(local, offsets)
+    return out

@@ -1,0 +1,98 @@
+"""Flash attention Pallas kernel — the BP online-softmax reduce as a TPU
+kernel (the kernel twin of ``repro.models.common.attention_blockwise``).
+
+Grid: (batch*heads, nq, nk) with the KV loop innermost; running (m, l, acc)
+live in VMEM scratch (the BP up-pass combine state); causal/sliding-window
+masking from block offsets via iota.  Supports GQA by passing pre-repeated
+or per-head-group K/V slices from ops.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, q_block: int,
+                  kv_block: int, nk: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (q_block, hd)
+    k = k_ref[0].astype(jnp.float32)  # (kv_block, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = pl.program_id(1) * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 0)
+    k_pos = kb * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1)
+    ok = jnp.ones((q_block, kv_block), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _emit():
+        l_safe = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                             "kv_block", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, q_block: int = 256,
+                    kv_block: int = 256, interpret: bool = True) -> jax.Array:
+    """q: (bh, sq, hd); k, v: (bh, sk, hd) — heads pre-folded into batch
+    (GQA repeat handled by the ops.py wrapper).  Returns (bh, sq, hd)."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0
+    nq, nk = sq // q_block, sk // kv_block
+    scale = 1.0 / math.sqrt(hd)
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, q_block=q_block, kv_block=kv_block,
+                          nk=nk),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

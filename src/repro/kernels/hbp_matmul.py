@@ -1,0 +1,97 @@
+"""HBP-tiled matmul Pallas kernel.
+
+The paper's Depth-n-MM / Strassen substrate adapted to the MXU: the
+recursive quadrant decomposition becomes (bm x bn x bk) VMEM tiles, and the
+output tiles are visited in **Morton (BI) order** — the bit-interleaved
+layout of §3.2 applied to the grid schedule, so successive grid steps reuse
+one of the two input panels (O(1)-block-sharing across time instead of
+space).  fp32 accumulation in VMEM scratch; each output tile written once
+(limited access).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compact1by1(x):
+    x = x & 0x55555555
+    x = (x | (x >> 1)) & 0x33333333
+    x = (x | (x >> 2)) & 0x0F0F0F0F
+    x = (x | (x >> 4)) & 0x00FF00FF
+    x = (x | (x >> 8)) & 0x0000FFFF
+    return x
+
+
+def _morton_ij(g):
+    """Decode Morton code -> (i, j) with traced integer ops."""
+    return _compact1by1(g >> 1), _compact1by1(g)
+
+
+def _mm_kernel(a_ref, b_ref, out_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(1) == nk - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "morton", "interpret"))
+def hbp_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+               bk: int = 128, morton: bool = True, interpret: bool = True) -> jax.Array:
+    """C = A @ B with Morton-ordered output tiles.  A: (m, k), B: (k, n)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nm, nn, nk = m // bm, n // bn, k // bk
+
+    if morton and nm == nn and (nm & (nm - 1)) == 0:
+        grid = (nm * nn, nk)
+
+        def a_map(g, kk):
+            i, _ = _morton_ij(g)
+            return (i, kk)
+
+        def b_map(g, kk):
+            _, j = _morton_ij(g)
+            return (kk, j)
+
+        def o_map(g, kk):
+            i, j = _morton_ij(g)
+            return (i, j)
+    else:
+        grid = (nm * nn, nk)
+
+        def a_map(g, kk):
+            return (g // nn, kk)
+
+        def b_map(g, kk):
+            return (kk, g % nn)
+
+        def o_map(g, kk):
+            return (g // nn, g % nn)
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), a_map),
+            pl.BlockSpec((bk, bn), b_map),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,50 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On the TPU target the kernels compile natively (interpret=False); on this
+CPU container they run in interpret mode (the kernel body executes through
+JAX ops) — tests validate them against the ``ref.py`` oracles either way.
+``prefer_ref=True`` dispatches to the pure-jnp reference (used by the model
+code on CPU so dry-run HLO reflects the XLA-fused path rather than the
+interpreter's loop nest).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.bp_scan import bp_scan as _bp_scan
+from repro.kernels.bi_transpose import bi_transpose as _bi_transpose
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.hbp_matmul import hbp_matmul as _hbp_matmul
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def scan(x, *, block: int = 512, prefer_ref: bool | None = None):
+    if prefer_ref or (prefer_ref is None and not on_tpu()):
+        return ref.bp_scan_ref(x)
+    return _bp_scan(x, block=block, interpret=not on_tpu())
+
+
+def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
+           prefer_ref: bool | None = None):
+    if prefer_ref or (prefer_ref is None and not on_tpu()):
+        return ref.matmul_ref(a, b)
+    return _hbp_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=not on_tpu())
+
+
+def transpose(x, *, bt: int = 128, prefer_ref: bool | None = None):
+    if prefer_ref or (prefer_ref is None and not on_tpu()):
+        return ref.transpose_ref(x)
+    return _bi_transpose(x, bt=bt, interpret=not on_tpu())
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              q_block: int = 256, kv_block: int = 256,
+              prefer_ref: bool | None = None):
+    if prefer_ref or (prefer_ref is None and not on_tpu()):
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window, q_block=q_block,
+                  kv_block=kv_block, interpret=not on_tpu())

@@ -1,0 +1,346 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits ``while`` bodies ONCE,
+but our layer stacks are ``lax.scan`` loops — a 64-layer model's flops would
+be undercounted 64x.  This module parses the optimized HLO, propagates
+execution-count multipliers through the call graph (while trip counts from
+``backend_config={"known_trip_count":...}``, fusion/call edges), and derives:
+
+  * ``flops``             — MXU flops (dot/convolution), trip-count weighted
+  * ``hbm_bytes``         — estimated HBM traffic: for every materializing
+                            instruction, operand bytes + result bytes
+                            (dynamic-update-slice counted in-place)
+  * ``collective_bytes``  — per-collective wire bytes per device, using ring
+                            cost models (all-reduce 2S(N-1)/N, all-gather
+                            S(N-1)/N, reduce-scatter S_in(N-1)/N, all-to-all
+                            S(N-1)/N, collective-permute S)
+  * per-collective-op breakdown for the §Dry-run log.
+
+All quantities are PER DEVICE (the HLO module is the per-device SPMD
+program).  This is a *static* traffic model: layout-change ops (transpose /
+broadcast / concatenate) are counted as materializing because they do
+materialize on the TPU target, even though the CPU backend may bitcast some
+of them.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+MATERIALIZING = {
+    "fusion", "dot", "convolution", "copy", "gather", "scatter", "reduce",
+    "reduce-window", "sort", "transpose", "broadcast", "iota", "concatenate",
+    "slice", "dynamic-slice", "pad", "reverse", "select-and-scatter",
+    "rng", "rng-bit-generator", "custom-call",
+} | set(COLLECTIVE_OPS)
+
+
+def shape_bytes(type_str: str) -> float:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Instruction:
+    name: str
+    result_type: str
+    op: str
+    operands: list[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: list[Instruction] = field(default_factory=list)
+    types: dict[str, str] = field(default_factory=dict)  # name -> result type
+    root: Instruction | None = None
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^=]*?\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$"
+)
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*((?:\([^()]*\)|[a-z][a-z0-9]*\[[0-9,]*\]))")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*?(\d+)")
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=(\{\{.*?\}\}|\[[0-9,]+\]<=\[[0-9,]+\])")
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):
+            m = _COMP_HEADER_RE.match(line)
+            if m and "{" in line:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                for pname, ptype in _PARAM_RE.findall(m.group(2)):
+                    cur.types[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        if "/*" in line:
+            line = re.sub(r"/\*.*?\*/", "", line)
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        is_root, name, rtype, op, operands, _attrs = m.groups()
+        ops = [o.strip().lstrip("%") for o in _split_operands(operands)]
+        instr = Instruction(name, rtype, op, ops, line)
+        cur.instructions.append(instr)
+        cur.types[name] = rtype
+        if is_root:
+            cur.root = instr
+    for comp in comps.values():
+        if comp.root is None and comp.instructions:
+            comp.root = comp.instructions[-1]
+    return comps, entry
+
+
+def _split_operands(s: str) -> list[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [o for o in (x.strip() for x in out) if o]
+
+
+def _callees(instr: Instruction, unknown_counter: list[int]) -> list[tuple[str, float]]:
+    """(callee computation, execution weight) edges for one instruction."""
+    line = instr.line
+    if instr.op == "while":
+        tm = _TRIP_RE.search(line)
+        trips = int(tm.group(1)) if tm else 1
+        if not tm:
+            unknown_counter[0] += 1
+        bm = re.search(r"body=%?([\w\.\-]+)", line)
+        return [(bm.group(1), float(trips))] if bm else []
+    if instr.op in ("fusion", "call", "async-start"):
+        cm = re.search(r"calls=%?([\w\.\-]+)", line)
+        return [(cm.group(1), 1.0)] if cm else []
+    if instr.op == "conditional":
+        cm = re.search(r"branch_computations=\{([^}]*)\}", line)
+        if cm:
+            return [(b.strip().lstrip("%"), 1.0) for b in cm.group(1).split(",")]
+    return []
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _REPLICA_GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}", 1)[0]
+        return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    lhs = g.split("<=")[0].strip("[]")
+    dims = [int(x) for x in lhs.split(",")]
+    return dims[-1] if dims else default
+
+
+def _dot_flops(instr: Instruction, comp: Computation) -> float:
+    dims = shape_dims(instr.result_type)
+    out_elems = math.prod(dims) if dims else 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    contraction = 1
+    if m and instr.operands:
+        lhs_dims = shape_dims(comp.types.get(instr.operands[0], ""))
+        for i in (int(x) for x in m.group(1).split(",") if x != ""):
+            if i < len(lhs_dims):
+                contraction *= lhs_dims[i]
+    return 2.0 * out_elems * contraction
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict[str, dict] = field(default_factory=dict)
+    n_while: int = 0
+    unknown_trip_counts: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": self.collectives,
+            "n_while": self.n_while,
+            "unknown_trip_counts": self.unknown_trip_counts,
+        }
+
+
+def analyze(text: str, n_devices_default: int = 1) -> HloStats:
+    comps, entry = parse_hlo(text)
+    stats = HloStats()
+    if entry is None:
+        return stats
+
+    unknown = [0]
+    edges: dict[str, list[tuple[str, float]]] = {}
+    for cname, comp in comps.items():
+        es: list[tuple[str, float]] = []
+        for instr in comp.instructions:
+            if instr.op == "while":
+                stats.n_while += 1
+            es.extend(_callees(instr, unknown))
+        edges[cname] = es
+    stats.unknown_trip_counts = unknown[0]
+
+    # topological order (DFS postorder reversed), call graph is a DAG
+    topo: list[str] = []
+    state: dict[str, int] = {}
+
+    def dfs(c: str):
+        stack = [(c, iter(edges.get(c, ())))]
+        state[c] = 1
+        while stack:
+            node, it = stack[-1]
+            advanced = False
+            for callee, _w in it:
+                if state.get(callee, 0) == 0 and callee in comps:
+                    state[callee] = 1
+                    stack.append((callee, iter(edges.get(callee, ()))))
+                    advanced = True
+                    break
+            if not advanced:
+                topo.append(node)
+                state[node] = 2
+                stack.pop()
+
+    dfs(entry)
+    topo.reverse()  # callers before callees
+
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    for cname in topo:
+        m = mult[cname]
+        if m == 0.0:
+            continue
+        for callee, w in edges.get(cname, ()):
+            if callee in comps:
+                mult[callee] += m * w
+
+    # which computations root in a dynamic-update-slice (in-place fusions)
+    root_is_dus = {
+        cname: (comp.root is not None and comp.root.op == "dynamic-update-slice")
+        for cname, comp in comps.items()
+    }
+
+    coll_acc: dict[str, dict] = defaultdict(
+        lambda: {"count": 0.0, "wire_bytes": 0.0, "payload_bytes": 0.0}
+    )
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for instr in comp.instructions:
+            op = instr.op
+            base = op[:-6] if op.endswith("-start") else op
+            if op in ("dot", "convolution"):
+                stats.flops += m * _dot_flops(instr, comp)
+            if base in COLLECTIVE_OPS and not op.endswith("-done"):
+                payload = shape_bytes(instr.result_type)
+                n = _group_size(instr.line, n_devices_default)
+                frac = (n - 1) / n if n > 1 else 0.0
+                if base == "all-reduce":
+                    wire = 2.0 * payload * frac
+                elif base == "all-gather":
+                    wire = payload * frac
+                elif base == "reduce-scatter":
+                    wire = payload * max(n - 1, 0)
+                elif base == "all-to-all":
+                    wire = payload * frac
+                else:  # collective-permute
+                    wire = payload
+                stats.collective_bytes += m * wire
+                acc = coll_acc[base]
+                acc["count"] += m
+                acc["wire_bytes"] += m * wire
+                acc["payload_bytes"] += m * payload
+            if base in MATERIALIZING and not op.endswith("-done"):
+                stats.hbm_bytes += m * _instr_hbm_bytes(instr, comp, comps, root_is_dus)
+            elif op == "dynamic-update-slice":
+                stats.hbm_bytes += m * _instr_hbm_bytes(instr, comp, comps, root_is_dus)
+
+    stats.collectives = {k: v for k, v in sorted(coll_acc.items())}
+    return stats
+
+
+def _instr_hbm_bytes(instr, comp, comps, root_is_dus) -> float:
+    """HBM traffic for one materializing instruction."""
+    operand_bytes = [shape_bytes(comp.types.get(o, "")) for o in instr.operands]
+    rbytes = shape_bytes(instr.result_type)
+
+    inplace = instr.op == "dynamic-update-slice"
+    if instr.op == "fusion":
+        cm = re.search(r"calls=%?([\w\.\-]+)", instr.line)
+        if cm and root_is_dus.get(cm.group(1), False):
+            inplace = True
+    if inplace:
+        # read all operands except the aliased (largest) buffer; write = the
+        # updated region, approximated by the largest non-aliased operand.
+        big = max(operand_bytes) if operand_bytes else 0.0
+        reads = sum(operand_bytes) - big
+        update = max([b for b in operand_bytes if b != big] or [rbytes * 0.0])
+        return reads + update
+    return rbytes + sum(operand_bytes)
+
+
+def count_collective_ops(text: str) -> dict[str, int]:
+    """Raw (unweighted) op counts, for quick sanity logging."""
+    from collections import Counter
+
+    return dict(Counter(re.findall(r"\b(" + "|".join(COLLECTIVE_OPS) + r")", text)))

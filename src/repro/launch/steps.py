@@ -1,0 +1,123 @@
+"""Step functions (train / prefill / decode) and their input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every input of the
+step being lowered — weak-type-correct, shardable, never allocated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Model, RunOptions, build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass
+class StepBundle:
+    """A step function plus abstract inputs, ready to lower."""
+
+    name: str
+    fn: Callable
+    args: tuple  # ShapeDtypeStruct pytrees
+    kinds: tuple  # "params" | "opt" | "batch" | "cache" | "scalar" per arg
+
+
+def abstract_params(model: Model) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def abstract_opt_state(aparams: Any) -> Any:
+    return jax.eval_shape(adamw_init, aparams)
+
+
+def abstract_batch(model: Model, shape: ShapeConfig, *, with_labels: bool) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    batch.update(model.batch_extras_specs(b, s))
+    return batch
+
+
+def abstract_cache(model: Model, shape: ShapeConfig) -> Any:
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+
+
+def make_train_step(model: Model, opt_cfg: Optional[AdamWConfig] = None):
+    """Training step with optional gradient-accumulation microbatching
+    (``model.opts.microbatches``): activations shrink k-fold, grads are
+    accumulated in fp32 sharded like the parameters (single-writer shards —
+    the paper's limited-access rule)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    n_micro = max(model.opts.microbatches, 1)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(model.loss)(params, mb)
+                g_acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros((), jnp.float32), g0), micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        new_params, new_opt, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, tokens, pos, cache):
+        return model.decode_step(params, tokens, pos, cache)
+
+    return decode_step
+
+
+def build_step_bundle(cfg: ModelConfig, shape: ShapeConfig,
+                      opts: Optional[RunOptions] = None) -> StepBundle:
+    model = build_model(cfg, opts)
+    aparams = abstract_params(model)
+
+    if shape.kind == "train":
+        fn = make_train_step(model)
+        aopt = abstract_opt_state(aparams)
+        abatch = abstract_batch(model, shape, with_labels=True)
+        return StepBundle("train_step", fn, (aparams, aopt, abatch),
+                          ("params", "opt", "batch"))
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model, shape.seq_len)
+        abatch = abstract_batch(model, shape, with_labels=False)
+        return StepBundle("prefill_step", fn, (aparams, abatch), ("params", "batch"))
+    if shape.kind == "decode":
+        fn = make_decode_step(model)
+        tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        acache = abstract_cache(model, shape)
+        return StepBundle("serve_step", fn, (aparams, tokens, pos, acache),
+                          ("params", "batch", "scalar", "cache"))
+    raise ValueError(shape.kind)

@@ -1,0 +1,32 @@
+"""Model zoo: build any assigned architecture from its config."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.models.base import Model, RunOptions
+
+
+def build_model(cfg: ModelConfig, opts: Optional[RunOptions] = None) -> Model:
+    from repro.models.dense import DenseLM
+    from repro.models.encdec import EncDecLM
+    from repro.models.hybrid import HybridLM
+    from repro.models.ssm import SSMLM
+    from repro.models.vlm import VisionLM
+
+    family_map = {
+        "dense": DenseLM,
+        "moe": DenseLM,  # MoE layers live inside DenseLM
+        "vlm": VisionLM,
+        "hybrid": HybridLM,
+        "ssm": SSMLM,
+        "audio": EncDecLM,
+    }
+    try:
+        cls = family_map[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r}") from None
+    return cls(cfg, opts)
+
+
+__all__ = ["Model", "RunOptions", "build_model"]

@@ -1,0 +1,92 @@
+"""Model API shared by all architecture families.
+
+A model is resource-oblivious: it never references the mesh, device count,
+cache/block sizes.  All distribution decisions live in the PWS planner
+(``repro.core.planner``) and the launchers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Any
+Cache = Any
+
+
+@dataclass(frozen=True)
+class RunOptions:
+    """Execution options — the knobs the perf hillclimb turns.  Defaults are
+    the paper-faithful baseline."""
+
+    remat: str = "full"  # "none" | "full"
+    ce_chunk: int = 512
+    # blockwise attention tile sizes (BP leaf sizes)
+    q_block: int = 512
+    kv_block: int = 1024
+    # beyond-paper optimizations (off in the baseline)
+    use_banded_local: bool = False  # banded sliding-window attention
+    causal_block_skip: bool = False  # triangular blockwise attention
+    windowed_decode_cache: bool = False  # ring-buffer cache for local layers
+    moe_dispatch: str = "sort"  # "sort" (prod) | "onehot" (reference)
+    moe_groups: int = 1  # dispatch groups (set to dp size by the planner)
+    fused_qkv: bool = False  # single QKV projection matmul
+    microbatches: int = 1  # gradient-accumulation microbatches
+
+
+class Model:
+    """Family-agnostic interface used by train/serve/dryrun."""
+
+    def __init__(self, cfg: ModelConfig, opts: Optional[RunOptions] = None):
+        self.cfg = cfg
+        self.opts = opts or RunOptions()
+
+    # -- construction ------------------------------------------------------
+    def init(self, rng: jax.Array) -> Params:
+        raise NotImplementedError
+
+    # -- training ----------------------------------------------------------
+    def loss(self, params: Params, batch: dict) -> jax.Array:
+        raise NotImplementedError
+
+    # -- inference ---------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int) -> Cache:
+        raise NotImplementedError
+
+    def prefill(self, params: Params, batch: dict, max_len: int):
+        """Returns (last_token_logits, cache)."""
+        raise NotImplementedError
+
+    def decode_step(self, params: Params, tokens: jax.Array, pos: jax.Array, cache: Cache,
+                    extras: Optional[dict] = None):
+        """tokens: (b, 1); pos: scalar current length.  Returns (logits, cache)."""
+        raise NotImplementedError
+
+    # -- dry-run plumbing ----------------------------------------------------
+    def batch_extras_specs(self, batch_size: int, seq_len: int) -> dict:
+        """ShapeDtypeStructs for modality-frontend stub inputs (VLM/audio)."""
+        return {}
+
+
+def stacked_init(per_layer_init, key: jax.Array, n_layers: int):
+    """vmap a single-layer init over layer keys -> stacked (L, ...) params."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(per_layer_init)(keys)
+
+
+def maybe_remat(fn, opts: RunOptions):
+    if opts.remat == "full":
+        # prevent_cse=False is the documented setting for remat-inside-scan:
+        # the loop structure already prevents CSE, and the CSE barrier
+        # otherwise materializes f32 copies of the carry.
+        return jax.checkpoint(fn, prevent_cse=False)
+    return fn
+
+
+def right_shift(tokens: jax.Array, bos: int = 1) -> jax.Array:
+    """Teacher-forcing input from target tokens."""
+    return jnp.concatenate([jnp.full_like(tokens[:, :1], bos), tokens[:, :-1]], axis=1)

@@ -1,0 +1,436 @@
+"""Shared model blocks: norms, RoPE, attention (GQA / sliding-window / cross),
+gated MLP, embeddings, and the blockwise (BP-structured) attention used for
+long sequences.
+
+The blockwise attention is the paper's BP computation made concrete: the
+online-softmax combine ``(m,l,acc) ⊕ (m',l',acc')`` is associative, so the
+KV-block loop is exactly a BP reduce (down-pass = per-block partial attention,
+up-pass = combine).  On TPU the per-block body becomes the Pallas kernel in
+``repro.kernels.flash_attention``; here we express the same computation with
+``jax.lax.scan`` so XLA sees a small, memory-bounded loop.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding_hints import constrain  # noqa: F401  (re-exported)
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_lookup(embed, tokens):
+    """Token embedding lookup with the table replicated over the tensor axis.
+
+    The table is (vocab@tp, d@fsdp) for the logits matmul; for the *lookup*
+    an all-gather of the small table over tp (~MBs) beats the all-reduce of
+    the (b, s, d) activation (~GBs) that GSPMD otherwise emits for a
+    vocab-sharded gather.  PWS-planner rule: steal the cheap fork.
+    """
+    table = constrain(embed, None, "*")  # replicate vocab over tp; keep fsdp dim
+    return table[tokens]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., s, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """(q, k) additive bias from positions; built from iota (no big constants)."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def repeat_kv(k, n_rep: int):
+    """(b, t, kvh, hd) -> (b, t, kvh*n_rep, hd)"""
+    if n_rep == 1:
+        return k
+    b, t, kvh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, kvh, n_rep, hd)).reshape(b, t, kvh * n_rep, hd)
+
+
+def attention_dense(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=None):
+    """Reference attention, materializes (q, k) scores.  Used for short
+    sequences and decode (q_len == 1)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    k = repeat_kv(k, h // kvh)
+    v = repeat_kv(v, h // kvh)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    # bf16 operands + f32 accumulation (native MXU semantics): never
+    # materialize an f32 copy of the (potentially cache-sized) k tensor
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = constrain(scores, "batch", "heads", "*", "*")
+    scores = scores + _mask_bias(q_pos, k_pos, causal=causal, window=window)[None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return constrain(out.astype(q.dtype), "batch", "*", "heads", "*")
+
+
+def _blockwise_fwd_inner(qs, ks, vs, qp, kp, window, *, causal, scale, n_rep):
+    """Forward pass over (nq, b, h, qb, hd) q-blocks and (nk, b, kvh, kb, hd)
+    kv-blocks.  Returns (out_blocks, lse_blocks) — the BP down-pass with the
+    online-softmax combine as the up-pass."""
+    nq, b, h, q_block, hd = qs.shape
+
+    def per_qblock(carry, qi):
+        qb, qpb = qi
+
+        def per_kvblock(state, ki):
+            m, l, acc = state
+            kb, vb, kpb = ki
+            kb_r = jnp.repeat(kb, n_rep, axis=1) if n_rep > 1 else kb
+            vb_r = jnp.repeat(vb, n_rep, axis=1) if n_rep > 1 else vb
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb_r,
+                           preferred_element_type=jnp.float32) * scale
+            s = constrain(s, "batch", "heads", "*", "*")
+            s = s + _mask_bias(qpb, kpb, causal=causal, window=window)[None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            correction = jnp.exp(m - m_new)
+            l_new = l * correction + jnp.sum(p, axis=-1)
+            acc_new = acc * correction[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vb_r.dtype), vb_r,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, h, q_block), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, q_block), jnp.float32),
+            jnp.zeros((b, h, q_block, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(per_kvblock, init, (ks, vs, kp))
+        l_safe = jnp.maximum(l, 1e-30)
+        out = acc / l_safe[..., None]
+        lse = m + jnp.log(l_safe)
+        return carry, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(per_qblock, None, (qs, qp))
+    return outs, lses  # (nq, b, h, qb, hd), (nq, b, h, qb)
+
+
+def _make_blockwise(causal: bool, scale: float, q_block: int, kv_block: int,
+                    n_rep: int):
+    """Build a custom-VJP blockwise attention for fixed static config.
+    The (possibly traced) sliding window is a real argument — never closed
+    over — so per-layer windows can flow through ``lax.scan``.
+
+    The backward recomputes P per block (flash-attention backward), so no
+    O(sq*sk) tensor is ever saved — the paper's limited-access discipline
+    applied to autodiff residuals.
+    """
+
+    @jax.custom_vjp
+    def fa(qs, ks, vs, qp, kp, warr):
+        outs, _ = _blockwise_fwd_inner(qs, ks, vs, qp, kp, warr[0], causal=causal,
+                                       scale=scale, n_rep=n_rep)
+        return outs
+
+    def fa_fwd(qs, ks, vs, qp, kp, warr):
+        outs, lses = _blockwise_fwd_inner(qs, ks, vs, qp, kp, warr[0], causal=causal,
+                                          scale=scale, n_rep=n_rep)
+        return outs, (qs, ks, vs, qp, kp, warr, outs, lses)
+
+    def fa_bwd(res, g):
+        qs, ks, vs, qp, kp, warr, outs, lses = res
+        window = warr[0]
+        nq, b, h, q_block, hd = qs.shape
+        nk = ks.shape[0]
+        kvh = ks.shape[2]
+        # D = rowsum(dO * O)
+        delta = jnp.sum(g.astype(jnp.float32) * outs.astype(jnp.float32), axis=-1)
+
+        def per_qblock(carry, xs):
+            dk_acc, dv_acc = carry  # (nk, b, kvh, kb, hd) fp32
+            qb, qpb, ob, lseb, gb, db = xs
+
+            def per_kvblock(dq, ki):
+                (kb, vb, kpb, dk_a, dv_a) = ki
+                kb_r = jnp.repeat(kb, n_rep, axis=1) if n_rep > 1 else kb
+                vb_r = jnp.repeat(vb, n_rep, axis=1) if n_rep > 1 else vb
+                s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb_r,
+                               preferred_element_type=jnp.float32) * scale
+                s = s + _mask_bias(qpb, kpb, causal=causal, window=window)[None, None]
+                p = jnp.exp(s - lseb[..., None])  # (b,h,qb,kb) f32
+                gf = gb
+                dv_blk = jnp.einsum("bhqk,bhqd->bhkd", p.astype(gf.dtype), gf,
+                                    preferred_element_type=jnp.float32)
+                dp = jnp.einsum("bhqd,bhkd->bhqk", gf, vb_r,
+                                preferred_element_type=jnp.float32)
+                ds = p * (dp - db[..., None]) * scale
+                dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds.astype(kb_r.dtype), kb_r,
+                                     preferred_element_type=jnp.float32)
+                dk_blk = jnp.einsum("bhqk,bhqd->bhkd", ds.astype(qb.dtype), qb,
+                                    preferred_element_type=jnp.float32)
+                if n_rep > 1:
+                    kb_sh = dk_blk.shape
+                    dk_blk = dk_blk.reshape(b, kvh, n_rep, *kb_sh[2:]).sum(axis=2)
+                    dv_blk = dv_blk.reshape(b, kvh, n_rep, *kb_sh[2:]).sum(axis=2)
+                return dq, (dk_a + dk_blk, dv_a + dv_blk)
+
+            dq0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+            dq, (dk_new, dv_new) = jax.lax.scan(
+                per_kvblock, dq0, (ks, vs, kp, dk_acc, dv_acc))
+            return (dk_new, dv_new), dq
+
+        dk0 = jnp.zeros((nk,) + ks.shape[1:], jnp.float32)
+        dv0 = jnp.zeros((nk,) + vs.shape[1:], jnp.float32)
+        (dk, dv), dqs = jax.lax.scan(per_qblock, (dk0, dv0),
+                                     (qs, qp, outs, lses, g, delta))
+        return (dqs.astype(qs.dtype), dk.astype(ks.dtype), dv.astype(vs.dtype),
+                None, None, None)
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    return fa
+
+
+def attention_blockwise(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    causal=True,
+    window=None,
+    softmax_scale=None,
+    q_block: int = 512,
+    kv_block: int = 1024,
+):
+    """Flash-style blockwise attention as a BP computation over KV blocks
+    with a flash backward (custom VJP — O(block^2) working set, never
+    O(sq*sk)).
+
+    The online-softmax combine ``(m,l,acc)`` is associative: the KV-block
+    loop is a BP reduce (paper Def. 3.2), and the Pallas kernel twin is
+    ``repro.kernels.flash_attention``.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    n_rep = h // kvh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0, (sq, q_block, sk, kv_block)
+    nq, nk = sq // q_block, sk // kv_block
+
+    qs = q.reshape(b, nq, q_block, h, hd).transpose(1, 0, 3, 2, 4)
+    ks = k.reshape(b, nk, kv_block, kvh, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nk, kv_block, kvh, hd).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(nq, q_block)
+    kp = k_pos.reshape(nk, kv_block)
+
+    warr = jnp.asarray([(1 << 30) if window is None else window], jnp.int32)
+    fa = _make_blockwise(causal, scale, q_block, kv_block, n_rep)
+    outs = fa(qs, ks, vs, qp, kp, warr)  # (nq, b, h, qb, hd)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+    return constrain(out, "batch", "*", "heads", "*")
+
+
+def attention_banded_local(q, k, v, q_pos, k_pos, *, window: int, softmax_scale=None):
+    """Beyond-paper optimized sliding-window attention: attend each query
+    block only to its own and the previous KV block (exact when
+    ``window <= block``).  This is the paper's O(1)-block-sharing principle:
+    each task (query block) touches O(1) KV blocks.
+
+    Compute drops from O(s^2) to O(s * 2*block).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    assert sq == sk, "banded local attention expects self-attention"
+    block = max(window, 128)
+    if sq % block != 0 or sq <= 2 * block:
+        return attention_blockwise(q, k, v, q_pos, k_pos, causal=True, window=window,
+                                   softmax_scale=softmax_scale)
+    kvh = k.shape[2]
+    n_rep = h // kvh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    nb = sq // block
+
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    qs = q.reshape(b, nb, block, h, hd)
+    ks = k.reshape(b, nb, block, h, hd)
+    vs = v.reshape(b, nb, block, h, hd)
+    # previous block (block 0's "previous" is zeros and fully masked)
+    ks_prev = jnp.concatenate([jnp.zeros_like(ks[:, :1]), ks[:, :-1]], axis=1)
+    vs_prev = jnp.concatenate([jnp.zeros_like(vs[:, :1]), vs[:, :-1]], axis=1)
+    kcat = jnp.concatenate([ks_prev, ks], axis=2)  # (b, nb, 2*block, h, hd)
+    vcat = jnp.concatenate([vs_prev, vs], axis=2)
+
+    qp = q_pos.reshape(nb, block)
+    kp_local = q_pos.reshape(nb, block)
+    kp_prev = jnp.concatenate([jnp.full((1, block), -10**9, jnp.int32), kp_local[:-1]], axis=0)
+    kp_cat = jnp.concatenate([kp_prev, kp_local], axis=1)  # (nb, 2*block)
+
+    s = jnp.einsum("bnqhd,bnkhd->bnhqk", qs.astype(jnp.float32), kcat.astype(jnp.float32)) * scale
+    ok = (kp_cat[:, None, :] <= qp[:, :, None]) & (kp_cat[:, None, :] > qp[:, :, None] - window)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[None, :, None]  # (b, nb, h, q, k)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", p.astype(vcat.dtype), vcat)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention_blockwise_triangular(q, k, v, q_pos, k_pos, *, window=None,
+                                   softmax_scale=None, q_block: int = 512):
+    """Beyond-paper optimization: causal blockwise attention that SKIPS
+    fully-masked (future) KV blocks by unrolling the q-block loop — q block i
+    attends KV blocks 0..i only.  Halves attention compute and the
+    scores-tensor traffic vs the masked full grid.  Exact (the skipped blocks
+    contribute nothing)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    assert sq == sk, "triangular path is for self-attention"
+    kvh = k.shape[2]
+    n_rep = h // kvh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    q_block = min(q_block, sq)
+    assert sq % q_block == 0
+    nq = sq // q_block
+
+    qs = q.reshape(b, nq, q_block, h, hd).transpose(1, 0, 3, 2, 4)
+    ks = k.reshape(b, nq, q_block, kvh, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nq, q_block, kvh, hd).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(nq, q_block)
+    kp = k_pos.reshape(nq, q_block)
+    warr = jnp.asarray([(1 << 30) if window is None else window], jnp.int32)
+
+    fa = _make_blockwise(True, scale, q_block, q_block, n_rep)
+    outs = []
+    for i in range(nq):
+        o = fa(qs[i : i + 1], ks[: i + 1], vs[: i + 1], qp[i : i + 1], kp[: i + 1],
+               warr)
+        outs.append(o)
+    out = jnp.concatenate(outs, 0).transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hd)
+    return constrain(out.astype(q.dtype), "batch", "*", "heads", "*")
+
+
+def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=None,
+              use_banded_local: bool = False, block_threshold: int = 2048,
+              q_block: int = 512, kv_block: int = 1024,
+              causal_block_skip: bool = False):
+    """Dispatch: dense for small/decode, blockwise for long, banded for local,
+    triangular for causal long self-attention when block-skip is enabled."""
+    sq, sk = q.shape[1], k.shape[1]
+    if window is not None and use_banded_local and sq == sk and sq > 2 * max(window, 128):
+        return attention_banded_local(q, k, v, q_pos, k_pos, window=window,
+                                      softmax_scale=softmax_scale)
+    if sq == 1 or (sq * sk <= block_threshold * block_threshold):
+        return attention_dense(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                               softmax_scale=softmax_scale)
+    if causal and causal_block_skip and sq == sk:
+        return attention_blockwise_triangular(q, k, v, q_pos, k_pos, window=window,
+                                              softmax_scale=softmax_scale,
+                                              q_block=max(q_block, kv_block))
+    return attention_blockwise(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                               softmax_scale=softmax_scale, q_block=q_block,
+                               kv_block=kv_block)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def gated_mlp(x, w_gate, w_up, w_down):
+    """SwiGLU MLP."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = constrain(h, *(["batch"] + ["*"] * (h.ndim - 2) + ["ffn"]))
+    out = jnp.einsum("...f,fd->...d", h, w_down)
+    if out.ndim == 3:
+        return constrain(out, "batch", "seq", "*")
+    return constrain(out, *(["batch"] + ["*"] * (out.ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(hidden, embed_out, labels, *, chunk: int = 512):
+    """Cross-entropy computed in sequence chunks so the (tokens, vocab) logits
+    tensor never materializes in full (the paper's principle of bounding the
+    working set of a task; each chunk is one BP leaf).
+
+    hidden: (b, s, d);  embed_out: (V, d);  labels: (b, s) int32 with -100 pad.
+    Returns mean loss (fp32 scalar).
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        chunk = s  # fallback: single chunk
+    n = s // chunk
+    hs = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def per_chunk(carry, xs):
+        h, lab = xs
+        h = constrain(h, "batch", "*", "*")
+        logits = jnp.einsum("bsd,vd->bsv", h, embed_out).astype(jnp.float32)
+        logits = constrain(logits, "batch", "*", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        valid = lab >= 0
+        safe = jnp.where(valid, lab, 0)
+        picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = jnp.where(valid, lse - picked, 0.0)
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(per_chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,236 @@
+"""Dense decoder-only LM (also hosts MoE layers) — covers qwen2.5-14b,
+qwen3-32b, qwen3-1.7b, gemma3-1b (5:1 local:global), olmoe-1b-7b,
+qwen3-moe-30b-a3b.
+
+The layer stack is a ``jax.lax.scan`` over layer-stacked parameters so the
+HLO is O(1) in depth.  Per-layer heterogeneity (sliding window / RoPE theta
+for Gemma3's 5:1 pattern) is *data*, carried as scanned inputs, so a single
+program covers the whole pattern — the HBP balance condition at the layer
+level.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.base import Model, RunOptions, maybe_remat, right_shift, stacked_init
+from repro.models.moe_layer import moe_ffn
+
+GLOBAL_WINDOW = 1 << 30  # sentinel: "no sliding window"
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer attention window (GLOBAL_WINDOW = full causal)."""
+    win = []
+    for i in range(cfg.n_layers):
+        if cfg.sliding_window is None:
+            win.append(GLOBAL_WINDOW)
+        elif cfg.global_every and (i % cfg.global_every == cfg.global_every - 1):
+            win.append(GLOBAL_WINDOW)  # every k-th layer is global
+        else:
+            win.append(cfg.sliding_window)
+    return jnp.asarray(win, jnp.int32)
+
+
+def layer_thetas(cfg: ModelConfig) -> jnp.ndarray:
+    """Gemma3 uses a small RoPE base for local layers, large for global."""
+    th = []
+    for i in range(cfg.n_layers):
+        is_global = (cfg.sliding_window is None) or (
+            cfg.global_every and i % cfg.global_every == cfg.global_every - 1
+        )
+        if cfg.sliding_window is not None and not is_global:
+            th.append(10_000.0)
+        else:
+            th.append(cfg.rope_theta)
+    return jnp.asarray(th, jnp.float32)
+
+
+class DenseLM(Model):
+    # -- params ------------------------------------------------------------
+    def init(self, rng):
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        d, hd = cfg.d_model, cfg.head_dim_
+        k_emb, k_layers, k_head = jax.random.split(rng, 3)
+
+        def one_layer(key):
+            ks = jax.random.split(key, 12)
+            p = {
+                "ln1": jnp.zeros((d,), dt),
+                "ln2": jnp.zeros((d,), dt),
+                "wq": common.dense_init(ks[0], (d, cfg.q_dim), dt),
+                "wk": common.dense_init(ks[1], (d, cfg.kv_dim), dt),
+                "wv": common.dense_init(ks[2], (d, cfg.kv_dim), dt),
+                "wo": common.dense_init(ks[3], (cfg.q_dim, d), dt),
+            }
+            if cfg.qkv_bias:
+                p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+                p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+                p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+            if cfg.qk_norm:
+                p["q_norm"] = jnp.zeros((hd,), dt)
+                p["k_norm"] = jnp.zeros((hd,), dt)
+            if cfg.n_experts:
+                p["router"] = common.dense_init(ks[4], (d, cfg.n_experts), jnp.float32)
+                p["e_gate"] = common.dense_init(ks[5], (cfg.n_experts, d, cfg.expert_d_ff), dt)
+                p["e_up"] = common.dense_init(ks[6], (cfg.n_experts, d, cfg.expert_d_ff), dt)
+                p["e_down"] = common.dense_init(ks[7], (cfg.n_experts, cfg.expert_d_ff, d), dt)
+            else:
+                p["w_gate"] = common.dense_init(ks[4], (d, cfg.d_ff), dt)
+                p["w_up"] = common.dense_init(ks[5], (d, cfg.d_ff), dt)
+                p["w_down"] = common.dense_init(ks[6], (cfg.d_ff, d), dt)
+            return p
+
+        params = {
+            "embed": common.dense_init(k_emb, (cfg.vocab_size, d), dt, scale=0.02),
+            "layers": stacked_init(one_layer, k_layers, cfg.n_layers),
+            "final_norm": jnp.zeros((d,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = common.dense_init(k_head, (cfg.vocab_size, d), dt, scale=0.02)
+        return params
+
+    # -- shared layer body ---------------------------------------------------
+    def _attn(self, pl, x, q_pos, k_pos, window, theta, k_cache=None, v_cache=None,
+              write_at=None):
+        """Attention sub-block.  If caches given, write k/v at ``write_at`` and
+        attend over the cache; else self-attention over x."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        hd = cfg.head_dim_
+        h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dq->bsq", h, pl["wq"])
+        k = jnp.einsum("bsd,dq->bsq", h, pl["wk"])
+        v = jnp.einsum("bsd,dq->bsq", h, pl["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + pl["bq"], k + pl["bk"], v + pl["bv"]
+        q = common.constrain(q.reshape(b, s, cfg.n_heads, hd), "batch", "*", "heads", "*")
+        k = common.constrain(k.reshape(b, s, cfg.n_kv_heads, hd), "batch", "*", "kv_heads", "*")
+        v = common.constrain(v.reshape(b, s, cfg.n_kv_heads, hd), "batch", "*", "kv_heads", "*")
+        if cfg.qk_norm:
+            q = common.rms_norm(q, pl["q_norm"], cfg.norm_eps)
+            k = common.rms_norm(k, pl["k_norm"], cfg.norm_eps)
+        q = common.apply_rope(q, q_pos, theta)
+        k = common.apply_rope(k, q_pos, theta)
+
+        if k_cache is not None:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, write_at, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, write_at, axis=1)
+        if k_cache is not None and s == 1:
+            k_att, v_att = k_cache, v_cache  # decode: attend over the cache
+        else:
+            k_att, v_att, k_pos = k, v, q_pos  # train/prefill: fresh k/v
+
+        o = common.attention(
+            q, k_att, v_att, q_pos, k_pos,
+            causal=True, window=window,
+            use_banded_local=self.opts.use_banded_local and k_cache is None,
+            block_threshold=max(self.opts.q_block, self.opts.kv_block),
+            q_block=self.opts.q_block, kv_block=self.opts.kv_block,
+            # active whenever we attend over fresh k/v (train AND prefill)
+            causal_block_skip=self.opts.causal_block_skip and s > 1,
+        )
+        o = jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"])
+        return x + common.constrain(o, "batch", "seq", "*"), (k_cache, v_cache)
+
+    def _ffn(self, pl, x):
+        cfg = self.cfg
+        h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            b, s, d = h.shape
+            y, aux = moe_ffn(
+                h.reshape(b * s, d), pl["router"], pl["e_gate"], pl["e_up"], pl["e_down"],
+                k=cfg.experts_per_token, capacity_factor=cfg.capacity_factor,
+                impl=self.opts.moe_dispatch, n_groups=self.opts.moe_groups,
+            )
+            return x + y.reshape(b, s, d), aux
+        return x + common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"]), jnp.zeros((), jnp.float32)
+
+    # -- forward (training) --------------------------------------------------
+    def _backbone(self, params, tokens, q_pos, k_pos, *, caches=None, write_at=None):
+        """Runs the layer stack.  caches: optional (k,v) stacked (L,b,S,K,hd).
+        Returns (hidden, new_caches, aux_sum)."""
+        cfg = self.cfg
+        x = common.embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = common.constrain(x, "batch", "seq", "*")
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+        windows = layer_windows(cfg)
+        thetas = layer_thetas(cfg)
+
+        def layer_fn(carry, xs):
+            x, aux = carry
+            if caches is None:
+                pl, window, theta = xs
+                kc = vc = None
+            else:
+                pl, window, theta, kc, vc = xs
+            x, (kc2, vc2) = self._attn(pl, x, q_pos, k_pos, window, theta,
+                                       k_cache=kc, v_cache=vc, write_at=write_at)
+            x, a = self._ffn(pl, x)
+            ys = None if caches is None else (kc2, vc2)
+            return (x, aux + a), ys
+
+        layer_fn = maybe_remat(layer_fn, self.opts) if caches is None else layer_fn
+        xs = (params["layers"], windows, thetas)
+        if caches is not None:
+            xs = xs + tuple(caches)
+        (x, aux), ys = jax.lax.scan(layer_fn, (x, jnp.zeros((), jnp.float32)), xs)
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, ys, aux
+
+    def _out_embed(self, params):
+        return params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        inputs = right_shift(tokens)
+        b, s = tokens.shape
+        pos = jnp.arange(s, dtype=jnp.int32)
+        x, _, aux = self._backbone(params, inputs, pos, pos)
+        ce = common.chunked_softmax_xent(x, self._out_embed(params), labels,
+                                         chunk=self.opts.ce_chunk)
+        return ce + cfg.router_aux_weight * aux / max(cfg.n_layers, 1)
+
+    # -- inference -----------------------------------------------------------
+    def init_cache(self, batch_size, max_len):
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        return {
+            "k": jnp.zeros(shape, cfg.activation_dtype),
+            "v": jnp.zeros(shape, cfg.activation_dtype),
+        }
+
+    def prefill(self, params, batch, max_len):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        q_pos = jnp.arange(s, dtype=jnp.int32)
+        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        cache = self.init_cache(b, max_len)
+        x, (kc, vc), _ = self._backbone(
+            params, tokens, q_pos, k_pos, caches=(cache["k"], cache["v"]), write_at=0
+        )
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], self._out_embed(params)).astype(jnp.float32)
+        return logits, {"k": kc, "v": vc}
+
+    def decode_step(self, params, tokens, pos, cache, extras=None):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        max_len = cache["k"].shape[2]
+        q_pos = jnp.full((1,), pos, jnp.int32)
+        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        x, (kc, vc), _ = self._backbone(
+            params, tokens, q_pos, k_pos, caches=(cache["k"], cache["v"]), write_at=pos
+        )
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], self._out_embed(params)).astype(jnp.float32)
+        return logits, {"k": kc, "v": vc}

@@ -1,0 +1,228 @@
+"""Encoder-decoder multimodal backbone (seamless-m4t-large-v2).
+
+The speech frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (b, enc_len, d_model) from ``input_specs()``.
+Decoder = causal self-attention + cross-attention over encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.base import Model, maybe_remat, right_shift, stacked_init
+
+
+class EncDecLM(Model):
+    def init(self, rng):
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        d, hd = cfg.d_model, cfg.head_dim_
+        k_emb, k_enc, k_dec, k_head = jax.random.split(rng, 4)
+
+        def attn_params(key):
+            ks = jax.random.split(key, 4)
+            return {
+                "wq": common.dense_init(ks[0], (d, cfg.q_dim), dt),
+                "wk": common.dense_init(ks[1], (d, cfg.kv_dim), dt),
+                "wv": common.dense_init(ks[2], (d, cfg.kv_dim), dt),
+                "wo": common.dense_init(ks[3], (cfg.q_dim, d), dt),
+            }
+
+        def mlp_params(key):
+            ks = jax.random.split(key, 3)
+            return {
+                "w_gate": common.dense_init(ks[0], (d, cfg.d_ff), dt),
+                "w_up": common.dense_init(ks[1], (d, cfg.d_ff), dt),
+                "w_down": common.dense_init(ks[2], (cfg.d_ff, d), dt),
+            }
+
+        def enc_layer(key):
+            k1, k2 = jax.random.split(key)
+            return {"ln1": jnp.zeros((d,), dt), "ln2": jnp.zeros((d,), dt),
+                    "attn": attn_params(k1), "mlp": mlp_params(k2)}
+
+        def dec_layer(key):
+            k1, k2, k3 = jax.random.split(key, 3)
+            return {"ln1": jnp.zeros((d,), dt), "ln2": jnp.zeros((d,), dt),
+                    "ln3": jnp.zeros((d,), dt),
+                    "self_attn": attn_params(k1), "cross_attn": attn_params(k2),
+                    "mlp": mlp_params(k3)}
+
+        return {
+            "embed": common.dense_init(k_emb, (cfg.vocab_size, d), dt, scale=0.02),
+            "encoder": stacked_init(enc_layer, k_enc, cfg.encoder_layers),
+            "decoder": stacked_init(dec_layer, k_dec, cfg.n_layers),
+            "enc_norm": jnp.zeros((d,), dt),
+            "final_norm": jnp.zeros((d,), dt),
+            "lm_head": common.dense_init(k_head, (cfg.vocab_size, d), dt, scale=0.02),
+        }
+
+    # -- attention helpers ------------------------------------------------------
+    def _proj_qkv(self, pa, xq, xkv, q_pos, k_pos, rope=True):
+        cfg = self.cfg
+        b, sq, _ = xq.shape
+        sk = xkv.shape[1]
+        hd = cfg.head_dim_
+        q = jnp.einsum("bsd,dq->bsq", xq, pa["wq"]).reshape(b, sq, cfg.n_heads, hd)
+        k = jnp.einsum("bsd,dq->bsq", xkv, pa["wk"]).reshape(b, sk, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bsd,dq->bsq", xkv, pa["wv"]).reshape(b, sk, cfg.n_kv_heads, hd)
+        q = common.constrain(q, "batch", "*", "heads", "*")
+        k = common.constrain(k, "batch", "*", "kv_heads", "*")
+        v = common.constrain(v, "batch", "*", "kv_heads", "*")
+        if rope:
+            q = common.apply_rope(q, q_pos, cfg.rope_theta)
+            k = common.apply_rope(k, k_pos, cfg.rope_theta)
+        return q, k, v
+
+    def _encoder(self, params, frames):
+        """frames: (b, enc_len, d) stub embeddings -> encoder output."""
+        cfg = self.cfg
+        x = common.constrain(frames.astype(cfg.activation_dtype), "batch", "seq", "*")
+        s = x.shape[1]
+        pos = jnp.arange(s, dtype=jnp.int32)
+
+        def layer_fn(x, pl):
+            h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
+            q, k, v = self._proj_qkv(pl["attn"], h, h, pos, pos)
+            o = common.attention(q, k, v, pos, pos, causal=False,
+                                 block_threshold=max(self.opts.q_block, self.opts.kv_block))
+            x = x + common.constrain(
+                jnp.einsum("bsq,qd->bsd", o.reshape(x.shape[0], s, cfg.q_dim), pl["attn"]["wo"]),
+                "batch", "seq", "*")
+            h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
+            x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+            return x, None
+
+        fn = maybe_remat(layer_fn, self.opts)
+        x, _ = jax.lax.scan(fn, x, params["encoder"])
+        return common.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _decoder(self, params, tokens, enc_out, q_pos, k_pos, *, caches=None, write_at=None,
+                 cross_kv=None):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = common.constrain(common.embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype),
+                             "batch", "seq", "*")
+        s = x.shape[1]
+        enc_pos = None if enc_out is None else jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+        def layer_fn(carry, xs):
+            x = carry
+            pl = xs[0]
+            kc = vc = None
+            if caches is not None:
+                kc, vc = xs[1], xs[2]
+            h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
+            q, k, v = self._proj_qkv(pl["self_attn"], h, h, q_pos, q_pos)
+            if kc is not None:
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k, write_at, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v, write_at, axis=1)
+                k, v = kc, vc
+            o = common.attention(q, k, v, q_pos, k_pos, causal=True,
+                                 block_threshold=max(self.opts.q_block, self.opts.kv_block))
+            x = x + common.constrain(
+                jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["self_attn"]["wo"]),
+                "batch", "seq", "*")
+
+            # cross attention
+            h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
+            if cross_kv is not None:
+                xk, xv = xs[-2], xs[-1]
+                hd = cfg.head_dim_
+                xq = jnp.einsum("bsd,dq->bsq", h, pl["cross_attn"]["wq"]).reshape(
+                    b, s, cfg.n_heads, hd)
+                cp = jnp.zeros((xk.shape[1],), jnp.int32)
+                o = common.attention_dense(xq, xk, xv, jnp.zeros((s,), jnp.int32), cp, causal=False)
+            else:
+                xq, xk, xv = self._proj_qkv(pl["cross_attn"], h, enc_out, enc_pos, enc_pos,
+                                            rope=False)
+                o = common.attention(xq, xk, xv, jnp.zeros((s,), jnp.int32),
+                                     jnp.zeros((enc_out.shape[1],), jnp.int32), causal=False,
+                                     block_threshold=max(self.opts.q_block, self.opts.kv_block))
+            x = x + common.constrain(
+                jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["cross_attn"]["wo"]),
+                "batch", "seq", "*")
+
+            h = common.rms_norm(x, pl["ln3"], cfg.norm_eps)
+            x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+            ys = None if caches is None else (kc, vc)
+            return x, ys
+
+        xs = [params["decoder"]]
+        if caches is not None:
+            xs += [caches[0], caches[1]]
+        if cross_kv is not None:
+            xs += [cross_kv[0], cross_kv[1]]
+        fn = maybe_remat(layer_fn, self.opts) if caches is None else layer_fn
+        x, ys = jax.lax.scan(fn, x, tuple(xs))
+        return common.rms_norm(x, params["final_norm"], cfg.norm_eps), ys
+
+    def _all_cross_kv(self, params, enc_out):
+        cfg = self.cfg
+        b, se, _ = enc_out.shape
+        hd = cfg.head_dim_
+
+        def per_layer(pl):
+            k = jnp.einsum("bsd,dq->bsq", enc_out, pl["cross_attn"]["wk"]).reshape(
+                b, se, cfg.n_kv_heads, hd)
+            v = jnp.einsum("bsd,dq->bsq", enc_out, pl["cross_attn"]["wv"]).reshape(
+                b, se, cfg.n_kv_heads, hd)
+            return k, v
+
+        return jax.lax.map(per_layer, params["decoder"])
+
+    # -- API --------------------------------------------------------------------
+    def loss(self, params, batch):
+        tokens, labels, frames = batch["tokens"], batch["labels"], batch["audio_frames"]
+        inputs = right_shift(tokens)
+        s = tokens.shape[1]
+        pos = jnp.arange(s, dtype=jnp.int32)
+        enc_out = self._encoder(params, frames)
+        x, _ = self._decoder(params, inputs, enc_out, pos, pos)
+        return common.chunked_softmax_xent(x, params["lm_head"], labels, chunk=self.opts.ce_chunk)
+
+    def enc_len(self, seq_len: int) -> int:
+        return max(int(seq_len * self.cfg.encoder_len_ratio), 16)
+
+    def init_cache(self, batch_size, max_len):
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        enc_len = self.enc_len(max_len)
+        kv = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        xkv = (cfg.n_layers, batch_size, enc_len, cfg.n_kv_heads, cfg.head_dim_)
+        return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+                "xk": jnp.zeros(xkv, dt), "xv": jnp.zeros(xkv, dt)}
+
+    def prefill(self, params, batch, max_len):
+        cfg = self.cfg
+        tokens, frames = batch["tokens"], batch["audio_frames"]
+        b, s = tokens.shape
+        q_pos = jnp.arange(s, dtype=jnp.int32)
+        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        enc_out = self._encoder(params, frames)
+        xk, xv = self._all_cross_kv(params, enc_out)
+        cache = self.init_cache(b, max_len)
+        x, (kc, vc) = self._decoder(params, tokens, None, q_pos, k_pos,
+                                    caches=(cache["k"], cache["v"]), write_at=0,
+                                    cross_kv=(xk, xv))
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"]).astype(jnp.float32)
+        return logits, {"k": kc, "v": vc, "xk": xk, "xv": xv}
+
+    def decode_step(self, params, tokens, pos, cache, extras=None):
+        max_len = cache["k"].shape[2]
+        q_pos = jnp.full((1,), pos, jnp.int32)
+        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        x, (kc, vc) = self._decoder(params, tokens, None, q_pos, k_pos,
+                                    caches=(cache["k"], cache["v"]), write_at=pos,
+                                    cross_kv=(cache["xk"], cache["xv"]))
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"]).astype(jnp.float32)
+        return logits, {"k": kc, "v": vc, "xk": cache["xk"], "xv": cache["xv"]}
+
+    def batch_extras_specs(self, batch_size, seq_len):
+        cfg = self.cfg
+        return {
+            "audio_frames": jax.ShapeDtypeStruct(
+                (batch_size, self.enc_len(seq_len), cfg.d_model), cfg.activation_dtype
+            )
+        }

@@ -1,0 +1,309 @@
+"""Hybrid RG-LRU + local-attention model (recurrentgemma-2b).
+
+Block pattern (rec, rec, attn) — 1 attention per 2 recurrent blocks.  26
+layers = 8 superblocks x (rec, rec, attn) + 2 trailing rec blocks.
+
+Paper tie-in: the RG-LRU linear recurrence h_t = a_t*h_{t-1} + b_t is computed
+with ``jax.lax.associative_scan`` — a balanced binary tree over the sequence,
+i.e. literally the paper's BP computation (down-pass = pair combines, up-pass
+= prefix fix-up).  The TPU kernel twin is ``repro.kernels.bp_scan``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.base import Model, maybe_remat, right_shift, stacked_init
+
+LRU_C = 8.0  # RG-LRU exponent constant from Griffin
+
+
+def rglru_scan(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t via associative (BP) scan.
+    a, b: (batch, seq, width) fp32.  Returns h (batch, seq, width)."""
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def block_diag_linear(x, w):
+    """x: (..., nh, wb); w: (nh, wb, wb) block-diagonal linear."""
+    return jnp.einsum("...hi,hij->...hj", x, w)
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv.  x: (b, s, w); w: (k, w).
+    state: (b, k-1, w) previous inputs (decode).  Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (b, s+k-1, w)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return y, new_state
+
+
+class HybridLM(Model):
+    @property
+    def _n_super(self):
+        return self.cfg.n_layers // len(self.cfg.block_pattern)  # 8
+
+    @property
+    def _n_tail(self):
+        return self.cfg.n_layers - self._n_super * len(self.cfg.block_pattern)  # 2
+
+    def init(self, rng):
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        d, w, hd = cfg.d_model, cfg.lru_width, cfg.head_dim_
+        nh = cfg.n_heads
+        wb = w // nh
+        k_emb, k_rec1, k_rec2, k_attn, k_tail = jax.random.split(rng, 5)
+
+        def rec_block(key):
+            ks = jax.random.split(key, 10)
+            return {
+                "ln1": jnp.zeros((d,), dt),
+                "ln2": jnp.zeros((d,), dt),
+                "w_x": common.dense_init(ks[0], (d, w), dt),
+                "w_gate_branch": common.dense_init(ks[1], (d, w), dt),
+                "conv_w": common.dense_init(ks[2], (cfg.conv1d_width, w), dt, scale=0.3),
+                "lru_a_gate": common.dense_init(ks[3], (nh, wb, wb), jnp.float32),
+                "lru_i_gate": common.dense_init(ks[4], (nh, wb, wb), jnp.float32),
+                "lru_a_param": jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, w))).astype(jnp.float32),
+                "w_out": common.dense_init(ks[5], (w, d), dt),
+                "w_mlp_gate": common.dense_init(ks[6], (d, cfg.d_ff), dt),
+                "w_mlp_up": common.dense_init(ks[7], (d, cfg.d_ff), dt),
+                "w_mlp_down": common.dense_init(ks[8], (cfg.d_ff, d), dt),
+            }
+
+        def attn_block(key):
+            ks = jax.random.split(key, 8)
+            return {
+                "ln1": jnp.zeros((d,), dt),
+                "ln2": jnp.zeros((d,), dt),
+                "wq": common.dense_init(ks[0], (d, cfg.q_dim), dt),
+                "wk": common.dense_init(ks[1], (d, cfg.kv_dim), dt),
+                "wv": common.dense_init(ks[2], (d, cfg.kv_dim), dt),
+                "wo": common.dense_init(ks[3], (cfg.q_dim, d), dt),
+                "w_mlp_gate": common.dense_init(ks[4], (d, cfg.d_ff), dt),
+                "w_mlp_up": common.dense_init(ks[5], (d, cfg.d_ff), dt),
+                "w_mlp_down": common.dense_init(ks[6], (cfg.d_ff, d), dt),
+            }
+
+        return {
+            "embed": common.dense_init(k_emb, (cfg.vocab_size, d), dt, scale=0.02),
+            "groups": {
+                "rec1": stacked_init(rec_block, k_rec1, self._n_super),
+                "rec2": stacked_init(rec_block, k_rec2, self._n_super),
+                "attn": stacked_init(attn_block, k_attn, self._n_super),
+            },
+            "tail_rec": stacked_init(rec_block, k_tail, self._n_tail),
+            "final_norm": jnp.zeros((d,), dt),
+        }
+
+    # -- blocks ----------------------------------------------------------------
+    def _rec_block(self, pl, x, lru_state=None, conv_state=None):
+        """Returns (x, new_lru_state, new_conv_state)."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        w = cfg.lru_width
+        nh = cfg.n_heads
+        wb = w // nh
+        h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
+        branch = common.constrain(jnp.einsum("bsd,dw->bsw", h, pl["w_x"]), "batch", "*", "ffn")
+        gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, pl["w_gate_branch"]).astype(jnp.float32))
+        gate = common.constrain(gate, "batch", "*", "ffn")
+        y, new_conv = causal_conv1d(branch, pl["conv_w"], conv_state)
+
+        # RG-LRU gates (block-diagonal linears, fp32)
+        yh = y.astype(jnp.float32).reshape(b, s, nh, wb)
+        r = jax.nn.sigmoid(block_diag_linear(yh, pl["lru_a_gate"])).reshape(b, s, w)
+        i = jax.nn.sigmoid(block_diag_linear(yh, pl["lru_i_gate"])).reshape(b, s, w)
+        log_a = -LRU_C * jax.nn.softplus(pl["lru_a_param"]) * r  # (b, s, w)
+        a = jnp.exp(log_a)
+        gated_in = i * y.astype(jnp.float32)
+        bterm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_in
+
+        if s == 1 and lru_state is not None:
+            hseq = a * lru_state[:, None] + bterm  # single decode step
+        else:
+            hseq = rglru_scan(a, bterm, h0=lru_state)
+        new_state = hseq[:, -1]  # (b, w)
+
+        out = (hseq * gate).astype(x.dtype)
+        x = x + common.constrain(jnp.einsum("bsw,wd->bsd", out, pl["w_out"]), "batch", "seq", "*")
+        h2 = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
+        x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"])
+        return x, new_state, new_conv
+
+    def _attn_block(self, pl, x, q_pos, k_pos, kc=None, vc=None, write_at=None):
+        cfg = self.cfg
+        b, s, d = x.shape
+        hd = cfg.head_dim_
+        h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dq->bsq", h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
+        k = jnp.einsum("bsd,dq->bsq", h, pl["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bsd,dq->bsq", h, pl["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        q = common.constrain(q, "batch", "*", "heads", "*")
+        k = common.constrain(k, "batch", "*", "kv_heads", "*")
+        v = common.constrain(v, "batch", "*", "kv_heads", "*")
+        q = common.apply_rope(q, q_pos, cfg.rope_theta)
+        k = common.apply_rope(k, q_pos, cfg.rope_theta)
+        if kc is not None:
+            cache_len = kc.shape[1]
+            if s > cache_len:
+                # ring-buffer prefill: keep only the last W positions; slot of
+                # position p is p mod W, i.e. roll the tail by (end % W)
+                shift = (write_at + s) % cache_len
+                kc = jnp.roll(k[:, -cache_len:], shift, axis=1)
+                vc = jnp.roll(v[:, -cache_len:], shift, axis=1)
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k, write_at, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v, write_at, axis=1)
+            if s > 1:
+                # prefill: attend over the fresh (in-order) k/v; the cache is
+                # output-only here
+                k_att, v_att, kp = k, v, q_pos
+            else:
+                k_att, v_att, kp = kc, vc, k_pos
+        else:
+            k_att, v_att, kp = k, v, k_pos
+        o = common.attention(q, k_att, v_att, q_pos, kp, causal=True,
+                             window=cfg.sliding_window,
+                             use_banded_local=self.opts.use_banded_local and kc is None,
+                             block_threshold=max(self.opts.q_block, self.opts.kv_block))
+        x = x + common.constrain(
+            jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"]),
+            "batch", "seq", "*")
+        h2 = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
+        x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"])
+        return x, (kc, vc)
+
+    # -- forward ------------------------------------------------------------------
+    def _backbone(self, params, tokens, q_pos, k_pos, *, cache=None, write_at=None):
+        cfg = self.cfg
+        x = common.embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = common.constrain(x, "batch", "seq", "*")
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+        def superblock(carry, xs):
+            x = carry
+            if cache is None:
+                p1, p2, pa = xs
+                st = {}
+            else:
+                p1, p2, pa, st = xs
+            x, s1, c1 = self._rec_block(p1, x, st.get("lru1"), st.get("conv1"))
+            x, s2, c2 = self._rec_block(p2, x, st.get("lru2"), st.get("conv2"))
+            x, (kc, vc) = self._attn_block(pa, x, q_pos, k_pos,
+                                           st.get("k"), st.get("v"), write_at)
+            ys = None
+            if cache is not None:
+                ys = {"lru1": s1, "conv1": c1, "lru2": s2, "conv2": c2, "k": kc, "v": vc}
+            return x, ys
+
+        def tail_block(carry, xs):
+            x = carry
+            if cache is None:
+                pl = xs
+                st = {}
+            else:
+                pl, st = xs
+            x, s1, c1 = self._rec_block(pl, x, st.get("lru"), st.get("conv"))
+            ys = None if cache is None else {"lru": s1, "conv": c1}
+            return x, ys
+
+        sb = maybe_remat(superblock, self.opts) if cache is None else superblock
+        tb = maybe_remat(tail_block, self.opts) if cache is None else tail_block
+
+        g = params["groups"]
+        xs = (g["rec1"], g["rec2"], g["attn"])
+        if cache is not None:
+            xs = xs + (cache["groups"],)
+        x, ys_g = jax.lax.scan(sb, x, xs)
+        xs_t = params["tail_rec"] if cache is None else (params["tail_rec"], cache["tail"])
+        x, ys_t = jax.lax.scan(tb, x, xs_t)
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        new_cache = None if cache is None else {"groups": ys_g, "tail": ys_t}
+        return x, new_cache
+
+    def loss(self, params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        inputs = right_shift(tokens)
+        s = tokens.shape[1]
+        pos = jnp.arange(s, dtype=jnp.int32)
+        x, _ = self._backbone(params, inputs, pos, pos)
+        return common.chunked_softmax_xent(x, params["embed"], labels, chunk=self.opts.ce_chunk)
+
+    # -- inference -------------------------------------------------------------------
+    def _attn_cache_len(self, max_len):
+        # local attention never looks back further than the window
+        if self.opts.windowed_decode_cache and self.cfg.sliding_window:
+            return min(max_len, self.cfg.sliding_window)
+        return max_len
+
+    def init_cache(self, batch_size, max_len):
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        w, kcw = cfg.lru_width, cfg.conv1d_width
+        n_sb, n_tail = self._n_super, self._n_tail
+        s_att = self._attn_cache_len(max_len)
+        kv = (n_sb, batch_size, s_att, cfg.n_kv_heads, cfg.head_dim_)
+        return {
+            "groups": {
+                "lru1": jnp.zeros((n_sb, batch_size, w), jnp.float32),
+                "conv1": jnp.zeros((n_sb, batch_size, kcw - 1, w), dt),
+                "lru2": jnp.zeros((n_sb, batch_size, w), jnp.float32),
+                "conv2": jnp.zeros((n_sb, batch_size, kcw - 1, w), dt),
+                "k": jnp.zeros(kv, dt),
+                "v": jnp.zeros(kv, dt),
+            },
+            "tail": {
+                "lru": jnp.zeros((n_tail, batch_size, w), jnp.float32),
+                "conv": jnp.zeros((n_tail, batch_size, kcw - 1, w), dt),
+            },
+        }
+
+    def prefill(self, params, batch, max_len):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        q_pos = jnp.arange(s, dtype=jnp.int32)
+        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        cache = self.init_cache(b, max_len)
+        x, new_cache = self._backbone(params, tokens, q_pos, k_pos, cache=cache, write_at=0)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"]).astype(jnp.float32)
+        return logits, new_cache
+
+    def decode_step(self, params, tokens, pos, cache, extras=None):
+        cfg = self.cfg
+        max_len = cache["groups"]["k"].shape[2]  # (n_sb, b, S, kvh, hd)
+        q_pos = jnp.full((1,), pos, jnp.int32)
+        if self.opts.windowed_decode_cache and cfg.sliding_window:
+            # ring buffer: slot j holds true position pos - ((pos - j) mod W)
+            idx = jnp.arange(max_len, dtype=jnp.int32)
+            ring_pos = pos - ((pos - idx) % max_len)
+            k_pos = jnp.where(ring_pos >= 0, ring_pos, -(1 << 30))
+            write_at = pos % max_len
+        else:
+            k_pos = jnp.arange(max_len, dtype=jnp.int32)
+            write_at = pos
+        x, new_cache = self._backbone(params, tokens, q_pos, k_pos, cache=cache,
+                                      write_at=write_at)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"]).astype(jnp.float32)
+        return logits, new_cache

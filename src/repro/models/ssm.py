@@ -1,0 +1,216 @@
+"""Mamba-2 (SSD — state-space duality) attention-free LM (mamba2-370m).
+
+Paper tie-in: the SSD chunked algorithm IS the paper's two-pass BP prefix
+computation — pass 1 computes per-chunk partial sums (intra-chunk outputs +
+chunk states, the BP down-pass leaves), pass 2 scans chunk states across
+chunks (the second BP pass of the paper's PS algorithm).  The chunk length
+is the BP leaf size; the cross-chunk scan is O(seq/chunk) sequential steps
+of O(1) state each — `repro.kernels.bp_scan` is the kernel twin.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.base import Model, maybe_remat, right_shift, stacked_init
+from repro.models.hybrid import causal_conv1d
+
+
+def segsum(a):
+    """a: (..., Q).  Returns (..., Q, Q) with out[..., q, k] = sum_{i=k+1..q} a_i
+    for q >= k, -inf otherwise (log of the decay matrix L)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{i=k+1..q}
+    iq = jnp.arange(q)
+    mask = iq[:, None] >= iq[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, B, C, chunk: int, initial_state=None):
+    """SSD forward.
+
+    x: (b, l, h, p) inputs (already multiplied by dt)
+    a: (b, l, h)    log-decay per step (dt * A, A negative)
+    B: (b, l, n)    input projection to state (ngroups=1, shared across heads)
+    C: (b, l, n)    output projection from state
+    Returns (y (b, l, h, p), final_state (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+
+    xr = x.reshape(b, c, chunk, h, p)
+    ar = a.reshape(b, c, chunk, h)
+    Br = B.reshape(b, c, chunk, n)
+    Cr = C.reshape(b, c, chunk, n)
+
+    a_cum = jnp.cumsum(ar, axis=2)  # (b, c, Q, h)
+
+    # 1. intra-chunk (diagonal block) outputs — BP leaves
+    L = jnp.exp(segsum(ar.transpose(0, 1, 3, 2)))  # (b, c, h, Q, Q)
+    y_diag = jnp.einsum("bcqn,bckn,bchqk,bckhp->bcqhp", Cr, Br, L, xr)
+
+    # 2. per-chunk states (contribution of each chunk to its final state)
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b, c, Q, h)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", Br, decay_states, xr)
+
+    # 3. inter-chunk recurrence — the second BP pass over chunk states
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (b, c, h)
+
+    def step(s_prev, inp):
+        dec, st = inp  # (b, h), (b, h, p, n)
+        s_new = dec[..., None, None] * s_prev + st
+        return s_new, s_prev  # emit state ENTERING the chunk
+
+    s0 = initial_state if initial_state is not None else jnp.zeros((b, h, p, n), x.dtype)
+    final_state, s_prev = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4))
+    )
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)  # (b, c, h, p, n)
+
+    # 4. inter-chunk (off-diagonal) outputs
+    decay_out = jnp.exp(a_cum)  # (b, c, Q, h)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cr, s_prev, decay_out)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(x, a, B, C, state):
+    """Single-token SSD update.  x: (b, h, p); a: (b, h); B, C: (b, n).
+    state: (b, h, p, n).  Returns (y (b,h,p), new_state)."""
+    decay = jnp.exp(a)[..., None, None]  # (b, h, 1, 1)
+    new_state = decay * state + jnp.einsum("bhp,bn->bhpn", x, B)
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C)
+    return y, new_state
+
+
+class SSMLM(Model):
+    def init(self, rng):
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        d = cfg.d_model
+        di = cfg.ssm_d_inner
+        ds = cfg.ssm_state
+        nh = cfg.ssm_n_heads
+        conv_dim = di + 2 * ds
+        k_emb, k_layers = jax.random.split(rng)
+
+        def one_layer(key):
+            ks = jax.random.split(key, 6)
+            return {
+                "ln": jnp.zeros((d,), dt),
+                "w_in": common.dense_init(ks[0], (d, 2 * di + 2 * ds + nh), dt),
+                "conv_w": common.dense_init(ks[1], (cfg.conv1d_width, conv_dim), dt, scale=0.3),
+                "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+                "dt_bias": jnp.log(jnp.expm1(jnp.exp(jnp.linspace(
+                    jnp.log(0.001), jnp.log(0.1), nh)))).astype(jnp.float32),
+                "D": jnp.ones((nh,), jnp.float32),
+                "gn": jnp.zeros((di,), dt),  # gated RMSNorm weight
+                "w_out": common.dense_init(ks[2], (di, d), dt),
+            }
+
+        return {
+            "embed": common.dense_init(k_emb, (cfg.vocab_size, d), dt, scale=0.02),
+            "layers": stacked_init(one_layer, k_layers, cfg.n_layers),
+            "final_norm": jnp.zeros((d,), dt),
+        }
+
+    def _mix(self, pl, x, *, conv_state=None, ssm_state=None, single_step=False):
+        """The Mamba2 mixer.  Returns (y, new_conv_state, new_ssm_state)."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        di, ds, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+
+        zxbcdt = common.constrain(jnp.einsum("bsd,de->bse", x, pl["w_in"]),
+                                  "batch", "*", "ffn")
+        z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+        xbc, new_conv = causal_conv1d(xbc, pl["conv_w"], conv_state)
+        xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+        xs, B, C = jnp.split(xbc, [di, di + ds], axis=-1)
+
+        dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + pl["dt_bias"])  # (b, s, nh)
+        A = -jnp.exp(pl["A_log"])  # (nh,)
+        xh = xs.reshape(b, s, nh, hp).astype(jnp.float32)
+        x_dt = xh * dt_v[..., None]
+        a = dt_v * A  # (b, s, nh)
+
+        if single_step:
+            y, new_ssm = ssd_decode_step(
+                x_dt[:, 0], a[:, 0], B[:, 0].astype(jnp.float32), C[:, 0].astype(jnp.float32),
+                ssm_state,
+            )
+            y = y[:, None]  # (b, 1, nh, hp)
+        else:
+            chunk = min(cfg.ssm_chunk, s)
+            while s % chunk != 0:  # largest divisor <= ssm_chunk
+                chunk -= 1
+            y, new_ssm = ssd_chunked(
+                x_dt, a, B.astype(jnp.float32), C.astype(jnp.float32),
+                chunk=chunk, initial_state=ssm_state,
+            )
+        y = y + pl["D"][:, None] * xh
+        y = y.reshape(b, s, di)
+        # gated RMSNorm (Mamba2): norm(y * silu(z))
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        y = common.rms_norm(y.astype(x.dtype), pl["gn"], cfg.norm_eps)
+        out = common.constrain(jnp.einsum("bse,ed->bsd", y, pl["w_out"]), "batch", "seq", "*")
+        return out, new_conv, new_ssm
+
+    def _backbone(self, params, tokens, *, cache=None, single_step=False):
+        cfg = self.cfg
+        x = common.embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = common.constrain(x, "batch", "seq", "*")
+
+        def layer_fn(carry, xs):
+            x = carry
+            if cache is None:
+                pl = xs
+                cs = ss = None
+            else:
+                pl, st = xs
+                cs, ss = st["conv"], st["ssm"]
+            h = common.rms_norm(x, pl["ln"], cfg.norm_eps)
+            y, nc, ns = self._mix(pl, h, conv_state=cs, ssm_state=ss, single_step=single_step)
+            ys = None if cache is None else {"conv": nc, "ssm": ns}
+            return x + y, ys
+
+        fn = maybe_remat(layer_fn, self.opts) if cache is None else layer_fn
+        xs = params["layers"] if cache is None else (params["layers"], cache)
+        x, new_cache = jax.lax.scan(fn, x, xs)
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, new_cache
+
+    def loss(self, params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        inputs = right_shift(tokens)
+        x, _ = self._backbone(params, inputs)
+        return common.chunked_softmax_xent(x, params["embed"], labels, chunk=self.opts.ce_chunk)
+
+    # -- inference: state is O(1) in sequence length (the SSM advantage) -----
+    def init_cache(self, batch_size, max_len):
+        cfg = self.cfg
+        di, ds = cfg.ssm_d_inner, cfg.ssm_state
+        nh, hp = cfg.ssm_n_heads, cfg.ssm_head_dim
+        conv_dim = di + 2 * ds
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch_size, cfg.conv1d_width - 1, conv_dim),
+                              cfg.activation_dtype),
+            "ssm": jnp.zeros((cfg.n_layers, batch_size, nh, hp, ds), jnp.float32),
+        }
+
+    def prefill(self, params, batch, max_len):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache = self.init_cache(b, max_len)
+        x, new_cache = self._backbone(params, tokens, cache=cache)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"]).astype(jnp.float32)
+        return logits, new_cache
+
+    def decode_step(self, params, tokens, pos, cache, extras=None):
+        x, new_cache = self._backbone(params, tokens, cache=cache, single_step=True)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"]).astype(jnp.float32)
+        return logits, new_cache

@@ -1,0 +1,226 @@
+"""VLM backbone (llama-3.2-vision-90b): decoder LM where every
+``cross_attn_every``-th layer is a gated cross-attention layer over
+precomputed image patch embeddings (vision frontend is a STUB per the
+assignment: ``input_specs()`` provides the patch embeddings).
+
+Structure: scan over superblocks of (cross_attn_every - 1) self-attn layers
++ 1 cross-attn layer.  100 layers -> 20 superblocks of (4 self + 1 cross).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.base import Model, maybe_remat, right_shift, stacked_init
+
+
+class VisionLM(Model):
+    @property
+    def _n_super(self):
+        return self.cfg.n_layers // self.cfg.cross_attn_every
+
+    @property
+    def _n_self_per(self):
+        return self.cfg.cross_attn_every - 1
+
+    def init(self, rng):
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        d, hd = cfg.d_model, cfg.head_dim_
+        k_emb, k_self, k_cross, k_head = jax.random.split(rng, 4)
+
+        def self_layer(key):
+            ks = jax.random.split(key, 8)
+            return {
+                "ln1": jnp.zeros((d,), dt),
+                "ln2": jnp.zeros((d,), dt),
+                "wq": common.dense_init(ks[0], (d, cfg.q_dim), dt),
+                "wk": common.dense_init(ks[1], (d, cfg.kv_dim), dt),
+                "wv": common.dense_init(ks[2], (d, cfg.kv_dim), dt),
+                "wo": common.dense_init(ks[3], (cfg.q_dim, d), dt),
+                "w_gate": common.dense_init(ks[4], (d, cfg.d_ff), dt),
+                "w_up": common.dense_init(ks[5], (d, cfg.d_ff), dt),
+                "w_down": common.dense_init(ks[6], (cfg.d_ff, d), dt),
+            }
+
+        def cross_layer(key):
+            p = self_layer(key)
+            p["xgate_attn"] = jnp.zeros((), dt)  # tanh-gated cross-attn
+            p["xgate_ffn"] = jnp.zeros((), dt)
+            p["q_norm"] = jnp.zeros((hd,), dt)
+            p["k_norm"] = jnp.zeros((hd,), dt)
+            return p
+
+        n_sb, n_self = self._n_super, self._n_self_per
+
+        def self_group(key):
+            return stacked_init(self_layer, key, n_self)
+
+        params = {
+            "embed": common.dense_init(k_emb, (cfg.vocab_size, d), dt, scale=0.02),
+            "self_layers": stacked_init(self_group, k_self, n_sb),  # (n_sb, n_self, ...)
+            "cross_layers": stacked_init(cross_layer, k_cross, n_sb),  # (n_sb, ...)
+            "final_norm": jnp.zeros((d,), dt),
+            "lm_head": common.dense_init(k_head, (cfg.vocab_size, d), dt, scale=0.02),
+        }
+        return params
+
+    # -- blocks --------------------------------------------------------------
+    def _self_attn_block(self, pl, x, q_pos, k_pos, kc=None, vc=None, write_at=None):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        hd = cfg.head_dim_
+        h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dq->bsq", h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
+        k = jnp.einsum("bsd,dq->bsq", h, pl["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bsd,dq->bsq", h, pl["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        q = common.constrain(q, "batch", "*", "heads", "*")
+        k = common.constrain(k, "batch", "*", "kv_heads", "*")
+        v = common.constrain(v, "batch", "*", "kv_heads", "*")
+        q = common.apply_rope(q, q_pos, cfg.rope_theta)
+        k = common.apply_rope(k, q_pos, cfg.rope_theta)
+        if kc is not None:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, write_at, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, write_at, axis=1)
+            k, v = kc, vc
+        o = common.attention(q, k, v, q_pos, k_pos, causal=True,
+                             block_threshold=max(self.opts.q_block, self.opts.kv_block))
+        o = common.constrain(jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"]),
+                             "batch", "seq", "*")
+        x = x + o
+        h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
+        x = x + common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"])
+        return x, (kc, vc)
+
+    def _cross_attn_block(self, pl, x, img_k, img_v):
+        """img_k/img_v: precomputed (b, n_img, kvh, hd) from patch embeddings."""
+        cfg = self.cfg
+        b, s, _ = x.shape
+        hd = cfg.head_dim_
+        h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dq->bsq", h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
+        q = common.rms_norm(q, pl["q_norm"], cfg.norm_eps)
+        n_img = img_k.shape[1]
+        q_pos = jnp.zeros((s,), jnp.int32)
+        k_pos = jnp.zeros((n_img,), jnp.int32)
+        o = common.attention_dense(q, img_k, img_v, q_pos, k_pos, causal=False)
+        o = common.constrain(jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"]),
+                             "batch", "seq", "*")
+        x = x + jnp.tanh(pl["xgate_attn"].astype(jnp.float32)).astype(x.dtype) * o
+        h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
+        m = common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"])
+        return x + jnp.tanh(pl["xgate_ffn"].astype(jnp.float32)).astype(x.dtype) * m
+
+    def _image_kv(self, pl_cross, img):
+        """Compute cross-attn K/V from patch embeddings for one cross layer."""
+        cfg = self.cfg
+        b, n_img, _ = img.shape
+        hd = cfg.head_dim_
+        k = jnp.einsum("bnd,dq->bnq", img, pl_cross["wk"]).reshape(b, n_img, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bnd,dq->bnq", img, pl_cross["wv"]).reshape(b, n_img, cfg.n_kv_heads, hd)
+        k = common.rms_norm(k, pl_cross["k_norm"], cfg.norm_eps)
+        return k, v
+
+    # -- forward ---------------------------------------------------------------
+    def _backbone(self, params, tokens, img, q_pos, k_pos, *, caches=None, write_at=None,
+                  img_kv=None):
+        cfg = self.cfg
+        x = common.embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = common.constrain(x, "batch", "seq", "*")
+
+        def superblock(carry, xs):
+            x = carry
+            pls, plc = xs[0], xs[1]
+            kcs = vcs = None
+            if caches is not None:
+                kcs, vcs = xs[2], xs[3]
+            new_kc, new_vc = [], []
+            for i in range(self._n_self_per):
+                pl_i = jax.tree.map(lambda a: a[i], pls)
+                kc_i = None if kcs is None else kcs[i]
+                vc_i = None if vcs is None else vcs[i]
+                x, (kc2, vc2) = self._self_attn_block(pl_i, x, q_pos, k_pos, kc_i, vc_i, write_at)
+                new_kc.append(kc2)
+                new_vc.append(vc2)
+            if img_kv is not None:
+                ik, iv = xs[-2], xs[-1]
+            else:
+                ik, iv = self._image_kv(plc, img)
+            x = self._cross_attn_block(plc, x, ik, iv)
+            ys = None
+            if caches is not None:
+                ys = (jnp.stack(new_kc), jnp.stack(new_vc))
+            return x, ys
+
+        xs = [params["self_layers"], params["cross_layers"]]
+        if caches is not None:
+            xs += [caches[0], caches[1]]
+        if img_kv is not None:
+            xs += [img_kv[0], img_kv[1]]
+        sb = maybe_remat(superblock, self.opts) if caches is None else superblock
+        x, ys = jax.lax.scan(sb, x, tuple(xs))
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, ys
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens, labels, img = batch["tokens"], batch["labels"], batch["image_embeds"]
+        inputs = right_shift(tokens)
+        s = tokens.shape[1]
+        pos = jnp.arange(s, dtype=jnp.int32)
+        x, _ = self._backbone(params, inputs, img, pos, pos)
+        return common.chunked_softmax_xent(x, params["lm_head"], labels, chunk=self.opts.ce_chunk)
+
+    # -- inference ---------------------------------------------------------------
+    def init_cache(self, batch_size, max_len):
+        cfg = self.cfg
+        shape = (self._n_super, self._n_self_per, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        ik_shape = (self._n_super, batch_size, cfg.n_image_tokens, cfg.n_kv_heads, cfg.head_dim_)
+        return {
+            "k": jnp.zeros(shape, cfg.activation_dtype),
+            "v": jnp.zeros(shape, cfg.activation_dtype),
+            "img_k": jnp.zeros(ik_shape, cfg.activation_dtype),
+            "img_v": jnp.zeros(ik_shape, cfg.activation_dtype),
+        }
+
+    def _all_image_kv(self, params, img):
+        def per_layer(plc):
+            return self._image_kv(plc, img)
+        return jax.lax.map(per_layer, params["cross_layers"])
+
+    def prefill(self, params, batch, max_len):
+        cfg = self.cfg
+        tokens, img = batch["tokens"], batch["image_embeds"]
+        b, s = tokens.shape
+        q_pos = jnp.arange(s, dtype=jnp.int32)
+        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        cache = self.init_cache(b, max_len)
+        img_k, img_v = self._all_image_kv(params, img)
+        x, (kc, vc) = self._backbone(
+            params, tokens, None, q_pos, k_pos,
+            caches=(cache["k"], cache["v"]), write_at=0, img_kv=(img_k, img_v),
+        )
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"]).astype(jnp.float32)
+        return logits, {"k": kc, "v": vc, "img_k": img_k, "img_v": img_v}
+
+    def decode_step(self, params, tokens, pos, cache, extras=None):
+        cfg = self.cfg
+        max_len = cache["k"].shape[3]
+        q_pos = jnp.full((1,), pos, jnp.int32)
+        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        x, (kc, vc) = self._backbone(
+            params, tokens, None, q_pos, k_pos,
+            caches=(cache["k"], cache["v"]), write_at=pos,
+            img_kv=(cache["img_k"], cache["img_v"]),
+        )
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"]).astype(jnp.float32)
+        return logits, {"k": kc, "v": vc, "img_k": cache["img_k"], "img_v": cache["img_v"]}
+
+    def batch_extras_specs(self, batch_size, seq_len):
+        cfg = self.cfg
+        return {
+            "image_embeds": jax.ShapeDtypeStruct(
+                (batch_size, cfg.n_image_tokens, cfg.d_model), cfg.activation_dtype
+            )
+        }

@@ -1,0 +1,13 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optim.compression import compress_int8, decompress_int8
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "compress_int8",
+    "decompress_int8",
+]

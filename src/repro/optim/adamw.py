@@ -1,0 +1,86 @@
+"""Decoupled AdamW with bf16 params + fp32 master copies (mixed precision).
+
+Paper tie-in (limited access): each optimizer-state shard has exactly one
+writer (the device owning the shard under the PWS planner's FSDP layout), so
+updates never contend on a block — the optimizer step is a pure BP map.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: Any) -> dict:
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": master,
+        "m": zeros,
+        "v": jax.tree.map(jnp.copy, zeros),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    opt_state: dict,
+    cfg: AdamWConfig,
+    lr_schedule: Optional[Callable[[jax.Array], jax.Array]] = None,
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = cfg.lr if lr_schedule is None else lr_schedule(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) if cfg.grad_clip else 1.0
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(master, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        return master - lr * delta, m, v
+
+    flat_master, treedef = jax.tree.flatten(opt_state["master"])
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new_master, new_m, new_v = [], [], []
+    for ma, g, m, v in zip(flat_master, flat_g, flat_m, flat_v):
+        a, b, c = upd(ma, g, m, v)
+        new_master.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    master = jax.tree.unflatten(treedef, new_master)
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype), master, params)
+    new_state = {
+        "step": step,
+        "master": master,
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}

@@ -1,0 +1,55 @@
+"""Int8 gradient compression with error feedback — for cross-pod (DCN) DP
+gradient sync, where link bandwidth is the binding constraint.
+
+Scheme: per-tensor symmetric int8 quantization q = round(g / s), s =
+max|g| / 127, with an error-feedback residual carried in the optimizer state
+so quantization error does not bias the update (Karimireddy et al., 2019).
+
+Paper tie-in: compression is a *block-miss* optimization in the paper's
+vocabulary — it reduces the bytes per shared block crossing the slowest
+"cache boundary" (the pod interconnect).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (q int8, scale fp32)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads: Any) -> tuple[Any, Any]:
+    qs = jax.tree.map(lambda g: compress_int8(g)[0], grads)
+    scales = jax.tree.map(lambda g: compress_int8(g)[1], grads)
+    return qs, scales
+
+
+def ef_compress(grads: Any, residual: Any) -> tuple[Any, Any, Any]:
+    """Error-feedback compression: returns (q, scales, new_residual)."""
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = compress_int8(x)
+        back = decompress_int8(q, s)
+        return q, s, x - back
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    qs, ss, rs = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = one(g, r)
+        qs.append(q)
+        ss.append(s)
+        rs.append(nr)
+    return jax.tree.unflatten(td, qs), jax.tree.unflatten(td, ss), jax.tree.unflatten(td, rs)

@@ -1,0 +1,4 @@
+from repro.runtime.fault_tolerance import FaultTolerantRunner, StragglerMonitor
+from repro.runtime.elastic import replan_for_mesh
+
+__all__ = ["FaultTolerantRunner", "StragglerMonitor", "replan_for_mesh"]

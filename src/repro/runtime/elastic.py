@@ -1,0 +1,36 @@
+"""Elastic scaling: re-plan shardings for a changed mesh.
+
+The PWS planner is a deterministic function of the mesh (paper Obs. 4.3:
+the steal schedule is determined by p) — so scaling from 512 to 256 chips
+(or onto a degraded 2x15x16 slice) is: rebuild the mesh, re-run
+``plan_params``/``plan_cache``, and device_put the checkpointed logical
+arrays under the new shardings.  No per-tensor migration logic.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.core import planner
+
+
+def replan_for_mesh(abstract_state: Any, new_mesh) -> Any:
+    """Shardings for a train state {params, opt_state} on a new mesh."""
+    aparams = abstract_state["params"]
+    pspec = planner.named(planner.plan_params(aparams, new_mesh), new_mesh)
+    opt = abstract_state["opt_state"]
+    ospec = {
+        "step": jax.sharding.NamedSharding(new_mesh, jax.sharding.PartitionSpec()),
+        "master": planner.named(planner.plan_params(opt["master"], new_mesh), new_mesh),
+        "m": planner.named(planner.plan_params(opt["m"], new_mesh), new_mesh),
+        "v": planner.named(planner.plan_params(opt["v"], new_mesh), new_mesh),
+    }
+    return {"params": pspec, "opt_state": ospec}
+
+
+def elastic_restore(ckpt_manager, abstract_state: Any, new_mesh):
+    """Restore the latest checkpoint resharded onto ``new_mesh``."""
+    shardings = replan_for_mesh(abstract_state, new_mesh)
+    step, state = ckpt_manager.restore_latest(abstract_state, shardings)
+    return step, state, shardings

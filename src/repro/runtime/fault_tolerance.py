@@ -1,0 +1,98 @@
+"""Fault tolerance: checkpoint/restart, step retry, straggler detection.
+
+At 1000+ node scale the failure model is: (a) hard node loss -> job restart
+from the latest checkpoint on a (possibly re-sized) mesh; (b) transient step
+failure (preemption notice, ECC retry, link flap) -> bounded in-place retry;
+(c) stragglers -> detected by per-step wall-time z-scores, mitigated by
+checkpoint-and-replan (the PWS planner is deterministic in p, so dropping to
+a smaller healthy mesh is a pure re-plan + elastic reshard — no manual
+resharding logic).
+
+The runner is deliberately policy-only: it wraps any step callable, so the
+same machinery drives tests (with injected failures) and real jobs.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+log = logging.getLogger(__name__)
+
+
+@dataclass
+class StragglerMonitor:
+    """Rolling per-step time stats; flags steps slower than mean + k*std.
+    On real pods, per-host step times arrive via the coordination service;
+    here the same math runs on the local step series."""
+
+    window: int = 50
+    k_sigma: float = 3.0
+    min_samples: int = 10
+    times: list[float] = field(default_factory=list)
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        ts = self.times
+        is_straggler = False
+        if len(ts) >= self.min_samples:
+            mean = sum(ts) / len(ts)
+            var = sum((t - mean) ** 2 for t in ts) / len(ts)
+            if dt > mean + self.k_sigma * max(var ** 0.5, 1e-9):
+                is_straggler = True
+                self.flagged += 1
+        ts.append(dt)
+        if len(ts) > self.window:
+            ts.pop(0)
+        return is_straggler
+
+
+class FaultTolerantRunner:
+    """Wraps a training loop step with retry + periodic checkpointing.
+
+    Usage::
+        runner = FaultTolerantRunner(ckpt_manager, save_every=100)
+        state, start = runner.restore_or(state_init, shardings)
+        for step in range(start, total):
+            state = runner.run_step(step, lambda: train_step(state, batch))
+    """
+
+    def __init__(self, ckpt_manager, *, save_every: int = 100,
+                 max_retries: int = 2, mesh_shape: Optional[dict] = None):
+        self.ckpt = ckpt_manager
+        self.save_every = save_every
+        self.max_retries = max_retries
+        self.mesh_shape = mesh_shape or {}
+        self.monitor = StragglerMonitor()
+        self.retries = 0
+
+    def restore_or(self, state_init: Any, shardings: Any = None) -> tuple[Any, int]:
+        try:
+            step, state = self.ckpt.restore_latest(state_init, shardings)
+            log.info("restored checkpoint at step %d", step)
+            return state, step + 1
+        except FileNotFoundError:
+            return state_init, 0
+
+    def run_step(self, step: int, state: Any, step_fn: Callable[[], Any]) -> Any:
+        """Execute one step with bounded retry; checkpoint on schedule."""
+        last_exc: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            t0 = time.time()
+            try:
+                new_state = step_fn()
+                dt = time.time() - t0
+                if self.monitor.observe(dt):
+                    log.warning("straggler step %d: %.3fs", step, dt)
+                if self.save_every and (step + 1) % self.save_every == 0:
+                    self.ckpt.save_async(step, new_state, self.mesh_shape)
+                return new_state
+            except Exception as e:  # noqa: BLE001 — deliberate: retry any step fault
+                last_exc = e
+                self.retries += 1
+                log.warning("step %d attempt %d failed: %r", step, attempt, e)
+        # out of retries: persist what we have and re-raise for job-level restart
+        self.ckpt.wait()
+        raise RuntimeError(f"step {step} failed after {self.max_retries} retries") from last_exc

@@ -1,0 +1,13 @@
+import os
+import sys
+from pathlib import Path
+
+# tests run on the single real CPU device (the dry-run sets its own flags in
+# a separate process); keep compilation light
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

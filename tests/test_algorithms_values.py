@@ -1,0 +1,63 @@
+"""Value-level correctness of the paper's algorithms vs independent oracles."""
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import algorithms_jax as A
+
+
+@given(st.integers(1, 500), st.integers(1, 7))
+@settings(max_examples=25, deadline=None)
+def test_prefix_sums_property(n, blk_pow):
+    x = jnp.asarray(np.random.default_rng(n).standard_normal(n), jnp.float32)
+    out = A.prefix_sums(x, block=2 ** blk_pow)
+    np.testing.assert_allclose(out, jnp.cumsum(x), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [2, 8, 64])
+def test_bi_roundtrip_and_transpose(n):
+    m = jnp.asarray(np.random.default_rng(0).standard_normal((n, n)), jnp.float32)
+    flat = A.rm_to_bi(m)
+    np.testing.assert_array_equal(A.bi_to_rm(flat, n), m)
+    np.testing.assert_array_equal(A.bi_to_rm_gapped(flat, n), m)
+    np.testing.assert_array_equal(A.bi_to_rm(A.mt_bi(flat, n), n), m.T)
+
+
+@pytest.mark.parametrize("n,leaf", [(64, 16), (128, 32)])
+def test_strassen(n, leaf):
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    np.testing.assert_allclose(A.strassen(a, b, leaf), a @ b, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [16, 256, 1024])
+def test_fft_six_step(n):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(n) + 1j * rng.standard_normal(n))
+    np.testing.assert_allclose(A.fft_six_step(x), jnp.fft.fft(x), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,seed", [(100, 0), (1000, 1), (4096, 2)])
+def test_list_ranking(n, seed):
+    perm = np.random.default_rng(seed).permutation(n)
+    succ = np.empty(n, dtype=np.int64)
+    succ[perm[:-1]] = perm[1:]
+    succ[perm[-1]] = perm[-1]
+    np.testing.assert_array_equal(A.list_ranking(succ), A.list_ranking_oracle(succ))
+
+
+@pytest.mark.parametrize("n,m,seed", [(50, 30, 0), (300, 200, 1), (500, 700, 2)])
+def test_connected_components(n, m, seed):
+    g = nx.gnm_random_graph(n, m, seed=seed)
+    edges = np.array(list(g.edges()), dtype=np.int64).reshape(-1, 2)
+    lab = A.connected_components(n, edges)
+    comps = list(nx.connected_components(g))
+    for comp in comps:
+        assert len(set(lab[list(comp)])) == 1
+    reps = [lab[min(c)] for c in comps]
+    assert len(set(reps)) == len(comps)

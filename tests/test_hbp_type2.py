@@ -1,0 +1,80 @@
+"""Type 2/3 HBP simulator programs: six-step FFT and list-ranking phases
+(with the paper's list gapping) under PWS."""
+import math
+
+import pytest
+
+from repro.core import costmodel
+from repro.core.algorithms import fft_program, list_ranking_phase_programs
+from repro.core.hbp import Memory
+from repro.core.machine import Machine
+from repro.core.pws import PWS
+from repro.core.rws import RWS
+
+P, M, B = 8, 512, 16
+
+
+def run(progs, p=P, sched=None):
+    m = Machine(p, M, B, scheduler=sched or PWS())
+    return m.run_sequence(progs) if isinstance(progs, list) else m.run(progs)
+
+
+def test_fft_program_runs_under_pws():
+    st = run(fft_program(1 << 8, Memory(B)))
+    assert st.accesses > 0
+    for pr, cnt in st.steals_per_priority().items():
+        assert cnt <= P - 1, (pr, cnt)
+
+
+def test_fft_work_slope_n_log_n():
+    """W(n) = O(n log n): slope of accesses vs n just above 1."""
+    ns = [1 << 6, 1 << 8, 1 << 10]
+    W = []
+    for n in ns:
+        st = run(fft_program(n, Memory(B)), p=1)
+        W.append(st.accesses)
+    lx = [math.log2(n) for n in ns]
+    ly = [math.log2(w) for w in W]
+    slope = (ly[-1] - ly[0]) / (lx[-1] - lx[0])
+    assert 1.0 <= slope <= 1.6, (slope, W)
+
+
+def test_fft_cache_excess_within_lemma_4_1():
+    """Lemma 4.1(ii): c=2, s(n)=sqrt(n) => excess O(p M/B log n / log M)."""
+    n = 1 << 10
+    q_seq = run(fft_program(n, Memory(B)), p=1).total_cache_misses()
+    q_pws = run(fft_program(n, Memory(B))).total_cache_misses()
+    bound = costmodel.pws_cache_excess_type2(P, M, B, n, c=2, s_kind="sqrt")
+    assert q_pws - q_seq <= 8 * bound, (q_pws - q_seq, bound)
+
+
+def test_lr_gapping_stops_block_misses_for_small_lists():
+    """§3.2: with gapping, contraction phases with m <= n/B^2 incur no block
+    misses; without it the compacted phases keep sharing blocks."""
+    n = 1 << 12
+
+    def phase_block_misses(gapped):
+        mem = Memory(B)
+        progs = list_ranking_phase_programs(n, mem, gapped=gapped)
+        machine = Machine(P, M, B, scheduler=PWS())
+        per_phase = []
+        for prog in progs:
+            before = machine.stats.total_block_misses()
+            machine.run(prog)
+            per_phase.append(machine.stats.total_block_misses() - before)
+        return per_phase
+
+    g = phase_block_misses(True)
+    c = phase_block_misses(False)
+    # late (small) phases: gapped spreads them across blocks
+    assert sum(g[-2:]) <= sum(c[-2:]) + 1, (g, c)
+    # totals never worse with gapping
+    assert sum(g) <= sum(c) + 2, (g, c)
+
+
+def test_lr_phases_geometric_work():
+    """Total work across phases is O(n) (geometric contraction)."""
+    n = 1 << 12
+    progs = list_ranking_phase_programs(n, Memory(B))
+    total_leaves = sum(p.n for p in progs)
+    assert total_leaves <= 2 * n

@@ -1,0 +1,69 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles,
+interpret mode (the kernel body executes on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import bi_transpose, bp_scan, flash_attention, hbp_matmul, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def tol(dtype):
+    # bf16: two-pass scans/attention round intermediates to bf16; absolute
+    # error grows with the running-sum magnitude
+    return dict(rtol=3e-2, atol=8e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("rows,n,block", [(1, 256, 64), (4, 1024, 128), (3, 512, 512)])
+def test_bp_scan_sweep(rows, n, block, dtype):
+    x = jax.random.normal(jax.random.key(n), (rows, n), jnp.float32).astype(dtype)
+    out = bp_scan(x, block=block)
+    want = ref.bp_scan_ref(x)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,k,n,bm", [(128, 64, 128, 64), (256, 256, 256, 64),
+                                      (64, 128, 64, 32)])
+def test_hbp_matmul_sweep(m, k, n, bm, dtype):
+    a = jax.random.normal(jax.random.key(m), (m, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(jax.random.key(n), (k, n), jnp.float32).astype(dtype)
+    out = hbp_matmul(a, b, bm=bm, bn=bm, bk=min(bm, k), morton=False)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-3,
+                               atol=5e-1 if dtype == jnp.bfloat16 else 1e-3)
+
+
+def test_hbp_matmul_morton_equals_rowmajor():
+    a = jax.random.normal(jax.random.key(0), (256, 256), jnp.float32)
+    b = jax.random.normal(jax.random.key(1), (256, 256), jnp.float32)
+    o1 = hbp_matmul(a, b, bm=64, bn=64, bk=64, morton=True)
+    o2 = hbp_matmul(a, b, bm=64, bn=64, bk=64, morton=False)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,n,bt,morton", [(128, 128, 64, True), (256, 128, 64, False),
+                                           (64, 64, 64, True)])
+def test_bi_transpose_sweep(m, n, bt, morton, dtype):
+    x = jax.random.normal(jax.random.key(m * n), (m, n), jnp.float32).astype(dtype)
+    out = bi_transpose(x, bt=bt, morton=morton)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x.T))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 40), (False, 0)])
+@pytest.mark.parametrize("bh,s,hd", [(2, 256, 64), (4, 128, 128)])
+def test_flash_attention_sweep(bh, s, hd, causal, window, dtype):
+    q = jax.random.normal(jax.random.key(1), (bh, s, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.key(2), (bh, s, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.key(3), (bh, s, hd), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, q_block=64, kv_block=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               **tol(dtype))

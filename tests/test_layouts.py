@@ -1,0 +1,60 @@
+"""BI (Morton) layout, gapping, in-order layout — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import layouts
+
+
+@given(st.integers(0, 2**15 - 1), st.integers(0, 2**15 - 1))
+def test_bi_index_roundtrip(r, c):
+    z = layouts.bi_index(np.asarray([r]), np.asarray([c]))
+    rr, cc = layouts.bi_coords(z)
+    assert int(rr[0]) == r and int(cc[0]) == c
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 32])
+def test_rm_bi_perms_inverse(n):
+    p1 = layouts.rm_to_bi_perm(n)
+    p2 = layouts.bi_to_rm_perm(n)
+    m = np.arange(n * n)
+    assert np.array_equal(m.reshape(-1)[p1][p2], m)
+
+
+def test_bi_quadrants_are_contiguous():
+    """The defining property: each quadrant of the matrix is one contiguous
+    quarter of the BI index space (recursively)."""
+    n = 16
+    z = np.arange(n * n)
+    r, c = layouts.bi_coords(z)
+    # first quarter of z-space = top-left quadrant
+    q0 = slice(0, n * n // 4)
+    assert r[q0].max() < n // 2 and c[q0].max() < n // 2
+    q3 = slice(3 * n * n // 4, n * n)
+    assert r[q3].min() >= n // 2 and c[q3].min() >= n // 2
+
+
+def test_gap_for_constant_expansion():
+    """sum over r=2^i of gap/r = O(1): total gapped size <= c * n."""
+    for n in [64, 256, 1024, 4096]:
+        assert layouts.gapped_size(n) <= 3 * n * n
+
+
+@pytest.mark.parametrize("m,n", [(64, 4096), (16, 1024), (1024, 1024)])
+def test_gapped_list_positions_disjoint_and_spread(m, n):
+    pos = layouts.gapped_list_positions(m, n)
+    assert len(np.unique(pos)) == m
+    assert pos.max() < max(n, m)
+
+
+def test_inorder_positions_separation():
+    """Nodes whose subtrees exceed B leaves are >= B apart in the in-order
+    layout (the paper's zero-block-sharing argument for the up-pass)."""
+    n = 256
+    pos = layouts.inorder_positions(n)
+    B = 16
+    big = [(lv, i) for (lv, i) in pos if 2**lv >= B]
+    vals = sorted(pos[k] for k in big)
+    diffs = np.diff(vals)
+    assert (diffs >= B - 1).all()

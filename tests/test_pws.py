@@ -1,0 +1,135 @@
+"""PWS scheduler theorems, measured on the simulated machine:
+Obs. 4.3 (<= p-1 steals per priority), Cor. 4.1 (<= 2 p D' attempts),
+priority monotonicity, cache-miss excess (Lemma 4.4), block-miss excess
+(Lemma 4.8), PWS <= RWS block waits, gapping and padding effects."""
+import math
+
+import pytest
+
+from repro.core import costmodel
+from repro.core.algorithms import (
+    BItoRMDirect,
+    MSum,
+    MTBI,
+    bi_to_rm_gapped_programs,
+    prefix_sums_programs,
+    strassen_program,
+)
+from repro.core.hbp import Memory
+from repro.core.machine import Machine
+from repro.core.pws import PWS
+from repro.core.rws import RWS
+
+P, M, B = 8, 512, 16
+
+
+def run(progs, p=P, M_=M, B_=B, sched=None, padded=False):
+    m = Machine(p, M_, B_, scheduler=sched or PWS(), padded=padded)
+    if isinstance(progs, list):
+        return m.run_sequence(progs)
+    return m.run(progs)
+
+
+def seq_run(progs):
+    """Sequential execution (p=1) => the sequential cache complexity Q."""
+    return run(progs, p=1)
+
+
+def test_steals_per_priority_bound():
+    """Obs. 4.3: at most p-1 tasks of any priority stolen under PWS."""
+    st = run(MSum(4096, Memory(B)))
+    for pr, cnt in st.steals_per_priority().items():
+        assert cnt <= P - 1, (pr, cnt)
+
+
+def test_steal_priorities_nonincreasing():
+    """PWS steals in rounds of non-increasing priority (chronological record
+    order; within one BP computation the max available head size only
+    shrinks)."""
+    st = run(MSum(4096, Memory(B)))
+    prios = [pr for _, pr, _, _ in st.steals]  # chronological
+    violations = sum(1 for a, b in zip(prios, prios[1:]) if b > a)
+    assert violations == 0, prios
+
+
+def test_total_steal_attempts_bound():
+    """Cor. 4.1: attempts <= 2 p D'."""
+    n = 4096
+    st = run(MSum(n, Memory(B)))
+    n_priorities = int(math.log2(n)) + 2
+    assert st.steal_attempts <= costmodel.steals_bound(P, n_priorities)
+
+
+def test_scan_cache_excess_lemma_4_4():
+    """Lemma 4.4(ii): excess <= c * p * M/B for scans."""
+    n = 1 << 14
+    q_seq = seq_run(MSum(n, Memory(B))).total_cache_misses()
+    q_pws = run(MSum(n, Memory(B))).total_cache_misses()
+    excess = q_pws - q_seq
+    assert excess <= 4 * costmodel.pws_cache_excess_bp(P, M, B), (excess, q_seq)
+
+
+def test_mt_cache_excess():
+    n_mat = 64
+    q_seq = seq_run(MTBI(n_mat, Memory(B))).total_cache_misses()
+    q_pws = run(MTBI(n_mat, Memory(B))).total_cache_misses()
+    assert q_pws - q_seq <= 4 * costmodel.pws_cache_excess_bp(P, M, B)
+
+
+def test_block_miss_excess_L1_lemma_4_8():
+    """Lemma 4.8(i): block misses O(p B log B) for L(r)=O(1) computations."""
+    st = run(MSum(1 << 14, Memory(B)))
+    bound = costmodel.pws_block_excess_bp(P, B, 1 << 14)
+    assert st.total_block_misses() <= 2 * bound, (st.total_block_misses(), bound)
+
+
+def test_pws_beats_rws_on_block_misses():
+    """The paper's headline: deterministic PWS incurs fewer block misses than
+    RWS on block-sharing computations (averaged over RWS seeds)."""
+    def total(sched):
+        return run(BItoRMDirect(64, Memory(B)), sched=sched).total_block_misses()
+
+    pws = total(PWS())
+    rws_avg = sum(total(RWS(seed=s)) for s in range(5)) / 5
+    assert pws <= rws_avg * 1.05, (pws, rws_avg)
+
+
+def test_gapping_reduces_block_misses():
+    """§3.2: BI->RM (gap RM) has lower block-miss cost than the direct
+    conversion, at the price of extra cache misses (bigger footprint)."""
+    direct = run(BItoRMDirect(64, Memory(B)))
+    gapped = run(bi_to_rm_gapped_programs(64, Memory(B)))
+    assert gapped.total_block_misses() <= direct.total_block_misses(), (
+        gapped.total_block_misses(), direct.total_block_misses())
+
+
+def test_padded_stacks_no_worse():
+    """Def. 3.3 / §4.7: padding separates stack frames; block misses do not
+    increase."""
+    plain = run(MSum(4096, Memory(B)), padded=False).total_block_misses()
+    padded = run(MSum(4096, Memory(B)), padded=True).total_block_misses()
+    assert padded <= plain + 2, (padded, plain)
+
+
+def test_prefix_sums_sequence_under_pws():
+    st = run(prefix_sums_programs(1 << 13, Memory(B)))
+    q_seq = seq_run(prefix_sums_programs(1 << 13, Memory(B))).total_cache_misses()
+    assert st.total_cache_misses() - q_seq <= 8 * costmodel.pws_cache_excess_bp(P, M, B)
+
+
+def test_strassen_type2_runs_and_bounds():
+    """Type 2 HBP (SEQ/FORK) executes correctly under PWS; cache excess within
+    Lemma 4.1(iii) envelope; steals-per-priority still <= p-1."""
+    st = run(strassen_program(16, Memory(B), base=4))
+    assert st.accesses > 0
+    for pr, cnt in st.steals_per_priority().items():
+        assert cnt <= P - 1
+    q_seq = seq_run(strassen_program(16, Memory(B), base=4)).total_cache_misses()
+    bound = costmodel.pws_cache_excess_type2(P, M, B, 16 * 16, c=1, s_kind="quarter")
+    assert st.total_cache_misses() - q_seq <= 8 * max(bound, 1)
+
+
+def test_usurpations_bounded_by_steals():
+    """Lemma 4.6-adjacent: usurpations happen only where steals happened."""
+    st = run(MSum(4096, Memory(B)))
+    assert st.usurpations <= 4 * max(len(st.steals), 1) + P

@@ -1,9 +1,22 @@
-"""Kernel microbenchmarks: wall time of the jnp reference path (the
-interpret-mode Pallas numbers are NOT meaningful performance on CPU; on the
-TPU target ops.py dispatches to pallas_call).  Emits name,us_per_call,derived
-rows; 'derived' = GFLOP/s or GB/s of the reference path."""
+"""Kernel microbenchmarks, resolved through the kernel registry.
+
+For every registered op this times:
+
+  * ``ref``            — the jnp oracle path (``dispatch(..., prefer_ref=True)``)
+                         — the XLA numbers that matter on this CPU container;
+  * ``pallas_fixed``   — the Pallas path (interpret mode on CPU) with the
+                         pre-substrate hard-coded tiles (128 / 512 / 256);
+  * ``pallas_planned`` — the Pallas path with planner-derived tiles.
+
+Interpret-mode wall times are NOT meaningful device performance; they are
+recorded so the before/after planner tiling delta is machine-checkable.  On
+the TPU target the same dispatch compiles natively.  Emits
+``name,us_per_call,derived`` CSV rows and (via ``main(json_path=...)``) a
+machine-readable ``BENCH_kernels.json``.
+"""
 from __future__ import annotations
 
+import json
 import sys
 import time
 from pathlib import Path
@@ -14,7 +27,17 @@ sys.path.insert(0, str(REPO / "src"))
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.kernels import ref  # noqa: E402
+from repro.kernels import planner, registry  # noqa: E402
+
+# the hard-coded tile constants the substrate replaced, kept here as the
+# benchmark's "before" arm
+LEGACY_TILES = {
+    "scan": {"block": 512},
+    "matmul": {"bm": 128, "bn": 128, "bk": 128},
+    "transpose": {"bt": 128},
+    "attention": {"q_block": 256, "kv_block": 256},
+    "fft": {"n1": 1},  # pre-substrate: no four-step split (one dense DFT)
+}
 
 
 def timeit(fn, *args, iters=5):
@@ -27,32 +50,64 @@ def timeit(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
-def main() -> None:
-    x = jax.random.normal(jax.random.key(0), (8, 8192), jnp.float32)
-    f = jax.jit(ref.bp_scan_ref)
-    us = timeit(f, x)
-    gbs = x.size * 4 * 2 / (us / 1e6) / 1e9
-    print(f"kernel_bp_scan_ref_8x8192,{us:.0f},{gbs:.2f}GB/s")
+def _cases():
+    key = jax.random.key
+    x = jax.random.normal(key(0), (8, 8192), jnp.float32)
+    a = jax.random.normal(key(1), (512, 512), jnp.float32)
+    b = jax.random.normal(key(2), (512, 512), jnp.float32)
+    q = jax.random.normal(key(3), (8, 512, 64), jnp.float32)
+    k = jax.random.normal(key(4), (8, 512, 64), jnp.float32)
+    v = jax.random.normal(key(5), (8, 512, 64), jnp.float32)
+    xc = (jax.random.normal(key(6), (4, 1024))
+          + 1j * jax.random.normal(key(7), (4, 1024))).astype(jnp.complex64)
+    return {
+        "scan": dict(args=(x,), kwargs={}, label="8x8192",
+                     derived=lambda us: f"{x.size * 4 * 2 / (us / 1e6) / 1e9:.2f}GB/s"),
+        "matmul": dict(args=(a, b), kwargs={}, label="512",
+                       derived=lambda us: f"{2 * 512**3 / (us / 1e6) / 1e9:.1f}GFLOP/s"),
+        "transpose": dict(args=(a,), kwargs={}, label="512",
+                          derived=lambda us: f"{a.size * 4 * 2 / (us / 1e6) / 1e9:.2f}GB/s"),
+        "attention": dict(args=(q, k, v), kwargs={"causal": False, "window": 0},
+                          label="8x512x64",
+                          derived=lambda us: f"{4 * 8 * 512 * 512 * 64 / (us / 1e6) / 1e9:.1f}GFLOP/s"),
+        "fft": dict(args=(xc,), kwargs={}, label="4x1024",
+                    derived=lambda us: f"{5 * 4 * 1024 * 10 / (us / 1e6) / 1e9:.2f}GFLOP/s"),
+    }
 
-    a = jax.random.normal(jax.random.key(1), (512, 512), jnp.float32)
-    b = jax.random.normal(jax.random.key(2), (512, 512), jnp.float32)
-    f = jax.jit(ref.matmul_ref)
-    us = timeit(f, a, b)
-    gf = 2 * 512**3 / (us / 1e6) / 1e9
-    print(f"kernel_matmul_ref_512,{us:.0f},{gf:.1f}GFLOP/s")
 
-    f = jax.jit(ref.transpose_ref)
-    us = timeit(f, a)
-    print(f"kernel_transpose_ref_512,{us:.0f},{a.size * 4 * 2 / (us / 1e6) / 1e9:.2f}GB/s")
+def main(json_path: str | None = None) -> dict:
+    results: dict[str, dict] = {}
+    for name, case in _cases().items():
+        args, kwargs = case["args"], case["kwargs"]
+        plan = dict(registry.get(name).plan(*args))
+        entry: dict = {"shape": case["label"], "planned_tiles": plan}
 
-    q = jax.random.normal(jax.random.key(3), (8, 512, 64), jnp.float32)
-    k = jax.random.normal(jax.random.key(4), (8, 512, 64), jnp.float32)
-    v = jax.random.normal(jax.random.key(5), (8, 512, 64), jnp.float32)
-    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
-    us = timeit(f, q, k, v)
-    gf = 4 * 8 * 512 * 512 * 64 / (us / 1e6) / 1e9
-    print(f"kernel_attention_ref_8x512x64,{us:.0f},{gf:.1f}GFLOP/s")
+        ref_fn = jax.jit(lambda *a, _n=name, _kw=kwargs: registry.dispatch(
+            _n, *a, prefer_ref=True, **_kw))
+        us = timeit(ref_fn, *args)
+        entry["ref_us"] = round(us, 1)
+        print(f"kernel_{name}_ref_{case['label']},{us:.0f},{case['derived'](us)}")
+
+        for arm, tiles in (("pallas_fixed", LEGACY_TILES[name]),
+                           ("pallas_planned", {})):
+            fn = jax.jit(lambda *a, _n=name, _kw=kwargs, _t=tiles: registry.dispatch(
+                _n, *a, prefer_ref=False, **_kw, **_t))
+            us = timeit(fn, *args, iters=2)
+            entry[f"{arm}_us"] = round(us, 1)
+            print(f"kernel_{name}_{arm}_{case['label']},{us:.0f},interpret")
+        results[name] = entry
+
+    dp = planner.device_params()
+    payload = {
+        "device": {"platform": dp.platform, "kind": dp.kind,
+                   "fast_bytes": dp.fast_bytes, "line_bytes": dp.line_bytes},
+        "ops": results,
+    }
+    if json_path:
+        Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"# wrote {json_path}")
+    return payload
 
 
 if __name__ == "__main__":
-    main()
+    main(json_path=str(REPO / "BENCH_kernels.json"))

@@ -23,7 +23,9 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     table1.main()
-    bench_kernels.main()
+    # also emits the machine-readable per-op report (before/after planner
+    # tiling) next to the repo root
+    bench_kernels.main(json_path=str(REPO / "BENCH_kernels.json"))
 
 
 if __name__ == "__main__":

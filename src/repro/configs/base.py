@@ -78,7 +78,8 @@ class ModelConfig:
     ssm_state: int = 0
     ssm_expand: int = 2
     ssm_head_dim: int = 64
-    ssm_chunk: int = 256
+    # SSD chunk (BP leaf); None = derived by the kernel planner
+    ssm_chunk: Optional[int] = 256
 
     # encoder-decoder (Seamless)
     is_encoder_decoder: bool = False

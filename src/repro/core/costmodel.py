@@ -23,6 +23,23 @@ def seq_cache_complexity_mt(n2: int, M: int, B: int) -> float:
     return n2 / B
 
 
+def seq_cache_complexity_mm(m: int, k: int, n: int, M: int, B: int) -> float:
+    """Q for classical tiled matmul (Depth-n-MM without Strassen):
+    O(mkn / (B sqrt M) + (mk + kn + mn)/B) — the bound the kernel tile
+    planner's block shapes must land inside."""
+    return m * k * n / (B * math.sqrt(max(M, 1))) + (m * k + k * n + m * n) / B
+
+
+def oblivious_tile_edge(M: int, n_arrays: int, itemsize: int) -> int:
+    """The resource-oblivious square-tile envelope: a recursive HBP
+    decomposition stops subdividing when its working set — ``n_arrays``
+    square operand tiles of ``itemsize``-byte elements — fits in a cache of
+    ``M`` bytes, i.e. edge = floor(sqrt(M / (n_arrays * itemsize))).  The
+    kernel planner derives every block shape from this envelope with the
+    *queried* device fast-memory size standing in for the unknown M."""
+    return max(int(math.isqrt(max(M // max(n_arrays * itemsize, 1), 1))), 1)
+
+
 def seq_cache_complexity_strassen(n: int, M: int, B: int) -> float:
     """Q = n^lambda / (B * M^(lambda/2 - 1)), lambda = log2 7 (§3.2)."""
     lam = math.log2(7)

@@ -1,14 +1,59 @@
-from repro.kernels import ops, ref
-from repro.kernels.bp_scan import bp_scan
+"""Resource-oblivious kernel substrate.
+
+The paper's claim — sequential-level cache and block costs *without knowing
+M or B* — carried from the simulator into the Pallas layer.  Three policy
+points, each in exactly one module:
+
+``registry``
+    ``dispatch(name, *args, **kw)`` is the only way model / launch /
+    benchmark code invokes a kernel.  Each op (``scan``, ``matmul``,
+    ``transpose``, ``attention``, ``fft``) registers a ``KernelSpec``
+    holding its Pallas implementation, its ``ref.py`` oracle, a planner
+    hook, and a backend predicate.  Dispatch routes to the oracle on
+    backends where Pallas would not compile natively (``prefer_ref``
+    overrides), else calls the kernel with planned tiles; explicit tile
+    kwargs (``bm``/``bn``/``bk``, ``block``, ``bt``, ``q_block``/
+    ``kv_block``, ``n1``) win over the plan.
+    ``default_impl(name)`` exposes the choice to callers that keep their
+    own jnp path (e.g. blockwise attention with its custom VJP).
+
+``planner``
+    Derives every tile shape at trace time from *queried* device parameters
+    (fast-memory bytes, lane/sublane tiling, dtype width) pushed through the
+    ``repro.core.costmodel`` envelopes (``oblivious_tile_edge``,
+    ``seq_cache_complexity_*``).  No kernel signature carries a hard-coded
+    block size; ``plan_*`` functions return divisor-exact tile dicts and
+    ``resolve_run_options`` fills the model layer's ``RunOptions`` tiles.
+    ``REPRO_FAST_BYTES`` overrides the queried fast-memory size.
+
+``morton``
+    The §3.2 bit-interleaved (BI) codec on plain integer arithmetic (works
+    on traced grid indices), and ``grid_decode(nm, nn)`` — the shared grid
+    scheduler giving Morton order on square power-of-two tile grids with a
+    row-major fallback.  Used by ``hbp_matmul``, ``bi_transpose``, and
+    ``flash_attention``; cross-validated against ``repro.core.layouts``.
+
+Kernel modules (``bp_scan``, ``hbp_matmul``, ``bi_transpose``,
+``flash_attention``, ``bi_fft``) stay importable directly for tests and
+experiments; ``ref`` holds the pure-jnp oracles.
+"""
+from repro.kernels import morton, planner, ref, registry
+from repro.kernels.bi_fft import bi_fft
 from repro.kernels.bi_transpose import bi_transpose
+from repro.kernels.bp_scan import bp_scan
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hbp_matmul import hbp_matmul
+from repro.kernels.registry import dispatch
 
 __all__ = [
-    "ops",
+    "morton",
+    "planner",
     "ref",
+    "registry",
+    "dispatch",
     "bp_scan",
     "bi_transpose",
+    "bi_fft",
     "flash_attention",
     "hbp_matmul",
 ]

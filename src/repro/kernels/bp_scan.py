@@ -9,10 +9,14 @@ Two BP passes (paper §3.2 'Scans'):
 
 Block size = the BP leaf size; VMEM tiling via BlockSpec.  Limited access:
 every output element written exactly once per pass.
+
+``block=None`` (the default) plans the leaf size from the queried device via
+``repro.kernels.planner``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,9 +36,14 @@ def _add_offset_kernel(y_ref, off_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def bp_scan(x: jax.Array, *, block: int = 512, interpret: bool = True) -> jax.Array:
+def bp_scan(x: jax.Array, *, block: Optional[int] = None,
+            interpret: bool = True) -> jax.Array:
     """Inclusive prefix sum along the last axis.  x: (rows, n)."""
     rows, n = x.shape
+    if block is None:
+        from repro.kernels import planner
+
+        block = planner.plan_scan(x.shape, x.dtype)["block"]
     block = min(block, n)
     assert n % block == 0, (n, block)
     nb = n // block

@@ -1,28 +1,39 @@
 """Flash attention Pallas kernel — the BP online-softmax reduce as a TPU
 kernel (the kernel twin of ``repro.models.common.attention_blockwise``).
 
-Grid: (batch*heads, nq, nk) with the KV loop innermost; running (m, l, acc)
+Grid: (batch*heads * nq, nk) with the KV loop innermost; running (m, l, acc)
 live in VMEM scratch (the BP up-pass combine state); causal/sliding-window
-masking from block offsets via iota.  Supports GQA by passing pre-repeated
-or per-head-group K/V slices from ops.py.
+masking from block offsets via iota.  The flattened outer (bh, nq) grid is
+decoded through ``repro.kernels.morton.grid_decode`` — Morton (BI) order
+when square power-of-two, so consecutive outer steps revisit the same KV
+panels (the §3.2 block-sharing argument applied to the schedule); row-major
+fallback otherwise.  The KV sweep for one (b, q) pair always stays
+contiguous (the scratch accumulator requires it).
+
+Supports GQA by passing pre-repeated or per-head-group K/V slices from the
+model adapter.  ``q_block=None`` / ``kv_block=None`` (the defaults) plan
+the blocks from the queried device via ``repro.kernels.planner``.
 """
 from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.morton import grid_decode
+
 NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   scale: float, causal: bool, window: int, q_block: int,
-                  kv_block: int, nk: int):
-    kb = pl.program_id(2)
+                  kv_block: int, nk: int, decode):
+    kb = pl.program_id(1)
 
     @pl.when(kb == 0)
     def _init():
@@ -36,7 +47,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
 
-    q_pos = pl.program_id(1) * q_block + jax.lax.broadcasted_iota(
+    _, qi = decode(pl.program_id(0))
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(
         jnp.int32, (q_block, kv_block), 0)
     k_pos = kb * kv_block + jax.lax.broadcasted_iota(
         jnp.int32, (q_block, kv_block), 1)
@@ -65,29 +77,49 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
                                              "kv_block", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0, q_block: int = 256,
-                    kv_block: int = 256, interpret: bool = True) -> jax.Array:
+                    causal: bool = True, window: int = 0,
+                    q_block: Optional[int] = None,
+                    kv_block: Optional[int] = None,
+                    interpret: bool = True) -> jax.Array:
     """q: (bh, sq, hd); k, v: (bh, sk, hd) — heads pre-folded into batch
-    (GQA repeat handled by the ops.py wrapper).  Returns (bh, sq, hd)."""
+    (GQA repeat handled by the caller).  Returns (bh, sq, hd)."""
     bh, sq, hd = q.shape
     sk = k.shape[1]
+    if q_block is None or kv_block is None:
+        from repro.kernels import planner
+
+        plan = planner.plan_attention(sq, sk, hd, q.dtype)
+        q_block = q_block if q_block is not None else plan["q_block"]
+        kv_block = kv_block if kv_block is not None else plan["kv_block"]
     q_block = min(q_block, sq)
     kv_block = min(kv_block, sk)
     assert sq % q_block == 0 and sk % kv_block == 0
     nq, nk = sq // q_block, sk // kv_block
     scale = 1.0 / math.sqrt(hd)
 
+    # BI order over the flattened (bh, nq) outer grid; the KV dim stays the
+    # trailing (contiguous) grid axis so the scratch combine is well-defined.
+    decode = grid_decode(bh, nq)
+
+    def q_map(g, j):
+        b, i = decode(g)
+        return (b, i, 0)
+
+    def kv_map(g, j):
+        b, _ = decode(g)
+        return (b, j, 0)
+
     return pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
                           window=window, q_block=q_block, kv_block=kv_block,
-                          nk=nk),
-        grid=(bh, nq, nk),
+                          nk=nk, decode=decode),
+        grid=(bh * nq, nk),
         in_specs=[
-            pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, kv_block, hd), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, kv_block, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, q_block, hd), q_map),
+            pl.BlockSpec((1, kv_block, hd), kv_map),
+            pl.BlockSpec((1, kv_block, hd), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+        out_specs=pl.BlockSpec((1, q_block, hd), q_map),
         out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((q_block,), jnp.float32),

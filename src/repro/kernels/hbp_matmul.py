@@ -3,33 +3,27 @@
 The paper's Depth-n-MM / Strassen substrate adapted to the MXU: the
 recursive quadrant decomposition becomes (bm x bn x bk) VMEM tiles, and the
 output tiles are visited in **Morton (BI) order** — the bit-interleaved
-layout of §3.2 applied to the grid schedule, so successive grid steps reuse
-one of the two input panels (O(1)-block-sharing across time instead of
-space).  fp32 accumulation in VMEM scratch; each output tile written once
-(limited access).
+layout of §3.2 applied to the grid schedule (shared machinery in
+``repro.kernels.morton``), so successive grid steps reuse one of the two
+input panels (O(1)-block-sharing across time instead of space).  fp32
+accumulation in VMEM scratch; each output tile written once (limited
+access).
+
+Tile sizes default to ``None`` = planned from the queried device through
+``repro.kernels.planner`` (no hard-coded block constants); pass explicit
+values to override.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _compact1by1(x):
-    x = x & 0x55555555
-    x = (x | (x >> 1)) & 0x33333333
-    x = (x | (x >> 2)) & 0x0F0F0F0F
-    x = (x | (x >> 4)) & 0x00FF00FF
-    x = (x | (x >> 8)) & 0x0000FFFF
-    return x
-
-
-def _morton_ij(g):
-    """Decode Morton code -> (i, j) with traced integer ops."""
-    return _compact1by1(g >> 1), _compact1by1(g)
+from repro.kernels.morton import grid_decode
 
 
 def _mm_kernel(a_ref, b_ref, out_ref, acc_ref, *, nk: int):
@@ -47,41 +41,38 @@ def _mm_kernel(a_ref, b_ref, out_ref, acc_ref, *, nk: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "morton", "interpret"))
-def hbp_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
-               bk: int = 128, morton: bool = True, interpret: bool = True) -> jax.Array:
+def hbp_matmul(a: jax.Array, b: jax.Array, *, bm: Optional[int] = None,
+               bn: Optional[int] = None, bk: Optional[int] = None,
+               morton: bool = True, interpret: bool = True) -> jax.Array:
     """C = A @ B with Morton-ordered output tiles.  A: (m, k), B: (k, n)."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
+    if bm is None or bn is None or bk is None:
+        from repro.kernels import planner
+
+        plan = planner.plan_matmul(m, k, n, a.dtype)
+        bm = bm if bm is not None else plan["bm"]
+        bn = bn if bn is not None else plan["bn"]
+        bk = bk if bk is not None else plan["bk"]
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
     nm, nn, nk = m // bm, n // bn, k // bk
 
-    if morton and nm == nn and (nm & (nm - 1)) == 0:
-        grid = (nm * nn, nk)
+    decode = grid_decode(nm, nn, morton=morton)
+    grid = (nm * nn, nk)
 
-        def a_map(g, kk):
-            i, _ = _morton_ij(g)
-            return (i, kk)
+    def a_map(g, kk):
+        i, _ = decode(g)
+        return (i, kk)
 
-        def b_map(g, kk):
-            _, j = _morton_ij(g)
-            return (kk, j)
+    def b_map(g, kk):
+        _, j = decode(g)
+        return (kk, j)
 
-        def o_map(g, kk):
-            i, j = _morton_ij(g)
-            return (i, j)
-    else:
-        grid = (nm * nn, nk)
-
-        def a_map(g, kk):
-            return (g // nn, kk)
-
-        def b_map(g, kk):
-            return (kk, g % nn)
-
-        def o_map(g, kk):
-            return (g // nn, g % nn)
+    def o_map(g, kk):
+        i, j = decode(g)
+        return (i, j)
 
     return pl.pallas_call(
         functools.partial(_mm_kernel, nk=nk),

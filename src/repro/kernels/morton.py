@@ -1,0 +1,73 @@
+"""Shared Morton (bit-interleaved / BI) grid-order machinery for the Pallas
+kernels — the paper's §3.2 BI layout applied to *grid schedules*.
+
+``repro.core.layouts`` holds the numpy codec used by the simulator; this
+module is its kernel-side twin: the same bit tricks written against plain
+integer arithmetic so they work on Python ints *and* traced Pallas grid
+indices (``pl.program_id``).  ``tests/test_kernel_substrate.py``
+cross-validates the two implementations.
+
+The exported policy point is :func:`grid_decode`: every kernel that walks a
+2-D tile grid through a flattened index asks it for the decode function, so
+the BI schedule (and its row-major fallback for non-square / non-power-of-two
+grids) lives in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+_EVEN_MASK = 0x55555555
+
+
+def part1by1(x):
+    """Spread the low 16 bits of ``x`` to even bit positions."""
+    x = (x | (x << 8)) & 0x00FF00FF
+    x = (x | (x << 4)) & 0x0F0F0F0F
+    x = (x | (x << 2)) & 0x33333333
+    x = (x | (x << 1)) & _EVEN_MASK
+    return x
+
+
+def compact1by1(x):
+    """Inverse of :func:`part1by1`: gather even bit positions to the low 16."""
+    x = x & _EVEN_MASK
+    x = (x | (x >> 1)) & 0x33333333
+    x = (x | (x >> 2)) & 0x0F0F0F0F
+    x = (x | (x >> 4)) & 0x00FF00FF
+    x = (x | (x >> 8)) & 0x0000FFFF
+    return x
+
+
+def morton_of(i, j):
+    """Morton (Z-order) code of tile (i, j): row bits to odd positions, column
+    bits to even — the recursive quadrant order (TL, TR, BL, BR)."""
+    return (part1by1(i) << 1) | part1by1(j)
+
+
+def morton_ij(g) -> Tuple[object, object]:
+    """Decode Morton code ``g`` -> (i, j).  Works on traced integers."""
+    return compact1by1(g >> 1), compact1by1(g)
+
+
+def supports_morton(nm: int, nn: int) -> bool:
+    """BI order is defined for square power-of-two tile grids (the paper's
+    recursive quadrant decomposition); everything else falls back row-major."""
+    return nm == nn and nm > 0 and (nm & (nm - 1)) == 0
+
+
+def grid_decode(nm: int, nn: int, *, morton: bool = True) -> Callable:
+    """Decode function for a flattened ``(nm * nn,)`` tile grid.
+
+    Returns ``decode(g) -> (i, j)`` visiting tiles in Morton (BI) order when
+    the grid is square power-of-two and ``morton`` is requested, else in
+    row-major order.  Successive BI steps share one of the two coordinates
+    half the time at every scale — the O(1)-block-sharing argument of §3.2
+    carried to the tile schedule.
+    """
+    if morton and supports_morton(nm, nn):
+        return morton_ij
+
+    def rowmajor(g):
+        return g // nn, g % nn
+
+    return rowmajor

@@ -1,0 +1,227 @@
+"""Resource-oblivious tile planner for the Pallas kernel substrate.
+
+The paper's HBP algorithms never see M or B; the scheduler gets sequential-
+level cache costs anyway.  The kernel-layer translation: no kernel signature
+carries a hard-coded tile size.  Block shapes are *derived* at trace time
+from queried device parameters (fast-memory bytes, lane/sublane tiling,
+dtype width) pushed through the ``repro.core.costmodel`` envelopes —
+``oblivious_tile_edge`` gives the O(sqrt M) square-tile bound, and the
+``seq_cache_complexity_*`` functions bound the modeled traffic of the chosen
+plan.  Explicit override kwargs on ``registry.dispatch`` are preserved for
+experiments.
+
+Every plan function returns a dict of the kernel's tile kwargs, with each
+tile an exact divisor of its dimension (the kernels assert divisibility) and
+a multiple of the hardware (sublane, lane) tiling whenever the shape allows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel
+
+# TPU vector-memory lane width (last-dim tiling) in elements.
+LANE = 128
+
+# Fallback fast-memory sizes when the backend exposes nothing better.
+# TPU: VMEM per core (v4/v5p class).  CPU: a shared L2+L3 slice — 8 MiB also
+# reproduces the seed's hand-tuned 512/1024 attention blocks exactly, so the
+# planner's CPU defaults are behavior-preserving.  GPU: an L2-ish slice.
+_DEFAULT_FAST_BYTES = {"tpu": 16 * 2**20, "cpu": 8 * 2**20, "gpu": 16 * 2**20}
+
+# Block-transfer granularity B (bytes): HBM burst on TPU, cache line on CPU.
+_DEFAULT_LINE_BYTES = {"tpu": 512, "cpu": 64, "gpu": 128}
+
+
+@dataclass(frozen=True)
+class DeviceParams:
+    """The queried machine parameters the planner is oblivious *about* —
+    it reads them at trace time instead of baking them into signatures."""
+
+    platform: str
+    kind: str
+    fast_bytes: int  # M: fast-memory capacity the tiles must fit in
+    line_bytes: int  # B: block-transfer granularity
+    lane: int = LANE
+
+    def sublane(self, dtype) -> int:
+        """Second-minor tiling multiple: 8 f32 rows, packed 2x/4x for
+        narrower dtypes (TPU (8, 128) native tile with sublane packing)."""
+        itemsize = jnp.dtype(dtype).itemsize
+        return max(32 // max(itemsize, 1), 8)
+
+
+def device_params(device=None) -> DeviceParams:
+    """Query the current device.  ``REPRO_FAST_BYTES`` overrides the
+    fast-memory size (useful to replay a plan for a different machine)."""
+    dev = device if device is not None else jax.devices()[0]
+    platform = getattr(dev, "platform", "cpu")
+    kind = getattr(dev, "device_kind", platform)
+    env = os.environ.get("REPRO_FAST_BYTES")
+    fast = int(env) if env else _DEFAULT_FAST_BYTES.get(platform, 8 * 2**20)
+    line = _DEFAULT_LINE_BYTES.get(platform, 64)
+    return DeviceParams(platform=platform, kind=kind, fast_bytes=fast,
+                        line_bytes=line)
+
+
+# ---------------------------------------------------------------------------
+# tile arithmetic
+# ---------------------------------------------------------------------------
+
+def _pow2_floor(x: int) -> int:
+    return 1 << max(int(x).bit_length() - 1, 0)
+
+
+def _divisors_desc(n: int) -> list[int]:
+    small, large = [], []
+    i = 1
+    while i * i <= n:
+        if n % i == 0:
+            small.append(i)
+            if i != n // i:
+                large.append(n // i)
+        i += 1
+    return large + small[::-1]  # large is built descending (n//i for i asc)
+
+
+def divisor_tile(dim: int, cap: int, multiple: int = 1) -> int:
+    """Largest divisor of ``dim`` that is <= cap, preferring multiples of the
+    hardware tiling ``multiple``; falls back to any divisor (odd shapes)."""
+    if dim <= 0:
+        return 1
+    cap = max(1, min(cap, dim))
+    divs = _divisors_desc(dim)
+    for d in divs:
+        if d <= cap and d % multiple == 0:
+            return d
+    for d in divs:
+        if d <= cap:
+            return d
+    return 1
+
+
+def _budget(dp: DeviceParams) -> int:
+    # One third of fast memory: leave headroom for double buffering and the
+    # out tile, mirroring the paper's constant-factor slack in Lemma 4.4.
+    return max(dp.fast_bytes // 3, 1024)
+
+
+# ---------------------------------------------------------------------------
+# per-op plans
+# ---------------------------------------------------------------------------
+
+def plan_scan(shape, dtype, dp: Optional[DeviceParams] = None) -> dict:
+    """BP leaf size for the two-pass prefix scan: the largest lane-aligned
+    block whose 4 resident buffers (in, out, local, offset) fit the envelope."""
+    dp = dp or device_params()
+    n = shape[-1]
+    itemsize = jnp.dtype(dtype).itemsize
+    cap = _pow2_floor(max(_budget(dp) // (4 * itemsize), 1))
+    return {"block": divisor_tile(n, cap, dp.lane)}
+
+
+def plan_matmul(m: int, k: int, n: int, dtype,
+                dp: Optional[DeviceParams] = None) -> dict:
+    """Square (bm, bn, bk) tiles from the O(sqrt M) envelope: two operand
+    tiles in ``dtype`` plus the f32 accumulator must fit the budget."""
+    dp = dp or device_params()
+    itemsize = jnp.dtype(dtype).itemsize
+    # bytes(t) = 2 t^2 itemsize (A, B panels) + 4 t^2 (f32 acc)
+    edge = costmodel.oblivious_tile_edge(_budget(dp), 1, 2 * itemsize + 4)
+    t = _pow2_floor(edge)
+    sub = dp.sublane(dtype)
+    return {
+        "bm": divisor_tile(m, t, sub),
+        "bn": divisor_tile(n, t, dp.lane),
+        "bk": divisor_tile(k, t, dp.lane),
+    }
+
+
+def plan_transpose(m: int, n: int, dtype,
+                   dp: Optional[DeviceParams] = None) -> dict:
+    """One square tile edge serving both dims (the kernel asserts the tile
+    divides each): derived from the 2-buffer (in tile, out tile) envelope."""
+    dp = dp or device_params()
+    itemsize = jnp.dtype(dtype).itemsize
+    t = _pow2_floor(costmodel.oblivious_tile_edge(_budget(dp), 2, itemsize))
+    g = math.gcd(m, n) if m != n else m
+    return {"bt": divisor_tile(g, t, dp.lane)}
+
+
+def plan_attention(sq: int, sk: int, hd: int, dtype,
+                   dp: Optional[DeviceParams] = None) -> dict:
+    """Flash-attention (q_block, kv_block): solve the working-set quadratic
+    4 t^2 (the f32 P tile) + t * hd * (3 itemsize + 4) <= budget for the
+    square block t, then clamp each block to a divisor of its axis."""
+    dp = dp or device_params()
+    itemsize = jnp.dtype(dtype).itemsize
+    budget = _budget(dp)
+    c1 = hd * (3 * itemsize + 4) + 8  # q/k/v rows + f32 acc row + (m, l)
+    t = int((-c1 + math.sqrt(c1 * c1 + 16.0 * budget)) / 8.0)
+    t = _pow2_floor(max(t, 1))
+    sub = dp.sublane(dtype)
+    qb = divisor_tile(sq, t, sub)
+    kb = divisor_tile(sk, 2 * t, sub)  # kv stream gets the deeper panel
+    return {"q_block": qb, "kv_block": kb}
+
+
+def plan_fft(n: int, dp: Optional[DeviceParams] = None) -> dict:
+    """Four-step split n = n1 * n2 with n1 ~ sqrt(n): both DFT factors stay
+    inside the O(sqrt M) envelope, matching the paper's Q = (n/B) log_M n
+    recursion depth of one for n <= M^2."""
+    if n <= 1 or n & (n - 1) != 0:
+        return {"n1": 1}
+    return {"n1": 1 << (n.bit_length() - 1) // 2}
+
+
+# ---------------------------------------------------------------------------
+# modeled traffic (the envelope check)
+# ---------------------------------------------------------------------------
+
+def modeled_matmul_misses(m: int, k: int, n: int, dtype, plan: dict,
+                          dp: Optional[DeviceParams] = None) -> float:
+    """Cache-line traffic of the planned tiling; tests assert it lands within
+    a constant factor of ``costmodel.seq_cache_complexity_mm``."""
+    dp = dp or device_params()
+    itemsize = jnp.dtype(dtype).itemsize
+    bm, bn, bk = plan["bm"], plan["bn"], plan["bk"]
+    steps = (m // bm) * (n // bn) * (k // bk)
+    per_step = (bm * bk + bk * bn) * itemsize
+    out = m * n * itemsize
+    return (steps * per_step + out) / dp.line_bytes
+
+
+# ---------------------------------------------------------------------------
+# RunOptions resolution — the launch/model layers' single policy point
+# ---------------------------------------------------------------------------
+
+def default_attention_blocks(dp: Optional[DeviceParams] = None,
+                             head_dim: int = 128,
+                             dtype=jnp.bfloat16) -> tuple[int, int]:
+    """Shape-agnostic blockwise-attention leaf sizes for the jnp (XLA) path:
+    the same envelope as :func:`plan_attention`, uncommitted to a sequence
+    length (the model clamps to the actual sequence at call time)."""
+    plan = plan_attention(1 << 30, 1 << 30, head_dim, dtype, dp)
+    return plan["q_block"], plan["kv_block"]
+
+
+def resolve_run_options(opts, *, head_dim: int = 128, dtype=jnp.bfloat16):
+    """Fill planner-owned ``None`` fields of a ``RunOptions``-like frozen
+    dataclass (q_block, kv_block) from the queried device and the model's
+    actual head_dim / activation dtype.  Idempotent."""
+    if opts.q_block is not None and opts.kv_block is not None:
+        return opts
+    qb, kb = default_attention_blocks(head_dim=head_dim, dtype=dtype)
+    updates = {}
+    if opts.q_block is None:
+        updates["q_block"] = qb
+    if opts.kv_block is None:
+        updates["kv_block"] = kb
+    return dataclasses.replace(opts, **updates)

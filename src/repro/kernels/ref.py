@@ -19,6 +19,11 @@ def transpose_ref(x: jax.Array) -> jax.Array:
     return x.T
 
 
+def fft_ref(x: jax.Array) -> jax.Array:
+    """DFT along the last axis (complex64)."""
+    return jnp.fft.fft(x.astype(jnp.complex64), axis=-1)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window: int = 0) -> jax.Array:
     """q, k, v: (bh, s, hd)."""

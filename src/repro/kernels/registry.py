@@ -1,0 +1,143 @@
+"""Kernel registry: one cost-model-driven dispatch path for every op.
+
+Each op registers a ``KernelSpec`` — a Pallas implementation, the pure-jnp
+``ref.py`` oracle, a planner hook that derives tile kwargs from the queried
+device (``repro.kernels.planner``), and a backend predicate saying when the
+Pallas path compiles natively.  ``dispatch(name, *args, **kwargs)`` replaces
+the four near-identical per-op wrappers the substrate used to carry in
+``ops.py``: it routes to the oracle on unsupported backends (so model code
+lowered on CPU sees the XLA-fused path, not the interpreter's loop nest),
+and otherwise calls the Pallas kernel with planner tiles merged under any
+explicit overrides.
+
+Registered ops: ``scan``, ``matmul``, ``transpose``, ``attention``, ``fft``
+— the paper's trio of scans / matrix computations / FFT plus the BP
+online-softmax reduce.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+
+from repro.kernels import planner, ref
+from repro.kernels.bi_fft import bi_fft
+from repro.kernels.bi_transpose import bi_transpose
+from repro.kernels.bp_scan import bp_scan
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hbp_matmul import hbp_matmul
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """One registered op.
+
+    ``plan(*arrays) -> dict`` produces the tile kwargs for the Pallas path;
+    ``pallas_only`` names the kwargs (tiles + schedule flags) that must be
+    stripped before calling the oracle, which takes semantic kwargs only.
+    ``supported() -> bool`` says whether the Pallas path compiles natively
+    on the current backend (it always *runs* via interpret mode)."""
+
+    name: str
+    pallas: Callable
+    ref: Callable
+    plan: Callable
+    pallas_only: Tuple[str, ...] = ()
+    supported: Callable[[], bool] = on_tpu
+
+
+_REGISTRY: dict[str, KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"kernel {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> KernelSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel {name!r}; registered: {names()}") from None
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def default_impl(name: str) -> str:
+    """The backend the generic dispatch will pick: 'pallas' or 'ref'."""
+    return "pallas" if get(name).supported() else "ref"
+
+
+def dispatch(name: str, *args, prefer_ref: Optional[bool] = None,
+             interpret: Optional[bool] = None, **kwargs):
+    """Generic dispatch: oracle when ``prefer_ref`` (default: whenever the
+    Pallas path would not compile natively), else the Pallas kernel with
+    planner-derived tiles under any explicit tile overrides."""
+    spec = get(name)
+    native = spec.supported()
+    if prefer_ref is None:
+        prefer_ref = not native
+    overrides = {k: kwargs.pop(k) for k in list(kwargs) if k in spec.pallas_only}
+    if prefer_ref:
+        return spec.ref(*args, **kwargs)
+    tiles = dict(spec.plan(*args))
+    tiles.update({k: v for k, v in overrides.items() if v is not None})
+    if interpret is None:
+        interpret = not native
+    return spec.pallas(*args, interpret=interpret, **kwargs, **tiles)
+
+
+# ---------------------------------------------------------------------------
+# registrations
+# ---------------------------------------------------------------------------
+
+register(KernelSpec(
+    name="scan",
+    pallas=bp_scan,
+    ref=ref.bp_scan_ref,
+    plan=lambda x: planner.plan_scan(x.shape, x.dtype),
+    pallas_only=("block",),
+))
+
+register(KernelSpec(
+    name="matmul",
+    pallas=hbp_matmul,
+    ref=ref.matmul_ref,
+    plan=lambda a, b: planner.plan_matmul(a.shape[0], a.shape[1], b.shape[1],
+                                          a.dtype),
+    pallas_only=("bm", "bn", "bk", "morton"),
+))
+
+register(KernelSpec(
+    name="transpose",
+    pallas=bi_transpose,
+    ref=ref.transpose_ref,
+    plan=lambda x: planner.plan_transpose(x.shape[0], x.shape[1], x.dtype),
+    pallas_only=("bt", "morton"),
+))
+
+register(KernelSpec(
+    name="attention",
+    pallas=flash_attention,
+    ref=ref.flash_attention_ref,
+    plan=lambda q, k, v: planner.plan_attention(q.shape[1], k.shape[1],
+                                                q.shape[2], q.dtype),
+    pallas_only=("q_block", "kv_block"),
+))
+
+register(KernelSpec(
+    name="fft",
+    pallas=bi_fft,
+    ref=ref.fft_ref,
+    plan=lambda x: planner.plan_fft(x.shape[-1]),
+    pallas_only=("n1",),
+))

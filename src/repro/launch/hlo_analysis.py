@@ -127,7 +127,10 @@ def parse_hlo(text: str) -> tuple[dict[str, Computation], str | None]:
         if not m:
             continue
         is_root, name, rtype, op, operands, _attrs = m.groups()
-        ops = [o.strip().lstrip("%") for o in _split_operands(operands)]
+        # operands appear as "f32[4,64]{1,0} %name" in optimized dumps: keep
+        # only the trailing token, else type lookups (dot contraction dims,
+        # HBM operand bytes) silently miss and undercount
+        ops = [o.strip().split()[-1].lstrip("%") for o in _split_operands(operands)]
         instr = Instruction(name, rtype, op, ops, line)
         cur.instructions.append(instr)
         cur.types[name] = rtype

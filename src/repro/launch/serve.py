@@ -33,11 +33,17 @@ class Request:
 class Server:
     def __init__(self, cfg, mesh, *, max_batch: int = 8, max_len: int = 256,
                  opts: RunOptions = RunOptions()):
+        from repro.kernels import planner as kernel_planner
+
         self.cfg = cfg
         self.mesh = mesh
         self.max_batch = max_batch
         self.max_len = max_len
-        self.model = build_model(cfg, opts)
+        # serving tiles (q/kv blocks, kernel backend) resolve through the
+        # kernel substrate; Server keeps the resolved copy for telemetry
+        self.opts = kernel_planner.resolve_run_options(
+            opts, head_dim=cfg.head_dim_, dtype=cfg.activation_dtype)
+        self.model = build_model(cfg, self.opts)
         self.rules = default_rules(mesh)
 
         with mesh, axis_rules(self.rules, mesh):

@@ -100,6 +100,8 @@ def make_decode_step(model: Model):
 
 def build_step_bundle(cfg: ModelConfig, shape: ShapeConfig,
                       opts: Optional[RunOptions] = None) -> StepBundle:
+    # kernel tiling resolves through the substrate inside Model.__init__
+    # (repro.kernels.planner.resolve_run_options) — no duplicate policy here
     model = build_model(cfg, opts)
     aparams = abstract_params(model)
 

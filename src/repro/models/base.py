@@ -25,9 +25,13 @@ class RunOptions:
 
     remat: str = "full"  # "none" | "full"
     ce_chunk: int = 512
-    # blockwise attention tile sizes (BP leaf sizes)
-    q_block: int = 512
-    kv_block: int = 1024
+    # blockwise attention tile sizes (BP leaf sizes); None = derived from the
+    # queried device by the kernel planner (repro.kernels.planner)
+    q_block: Optional[int] = None
+    kv_block: Optional[int] = None
+    # kernel backend for attention: "auto" consults the kernel registry
+    # (Pallas on TPU, jnp blockwise elsewhere); "jnp" | "pallas" force
+    attention_impl: str = "auto"
     # beyond-paper optimizations (off in the baseline)
     use_banded_local: bool = False  # banded sliding-window attention
     causal_block_skip: bool = False  # triangular blockwise attention
@@ -42,8 +46,15 @@ class Model:
     """Family-agnostic interface used by train/serve/dryrun."""
 
     def __init__(self, cfg: ModelConfig, opts: Optional[RunOptions] = None):
+        from repro.kernels import planner  # kernels never import models
+
         self.cfg = cfg
-        self.opts = opts or RunOptions()
+        # fill planner-owned tile fields (q_block/kv_block) from the queried
+        # device and the model's real head geometry / activation dtype —
+        # models stay resource-oblivious, the substrate decides
+        self.opts = planner.resolve_run_options(
+            opts or RunOptions(), head_dim=cfg.head_dim_,
+            dtype=cfg.activation_dtype)
 
     # -- construction ------------------------------------------------------
     def init(self, rng: jax.Array) -> Params:

@@ -361,13 +361,58 @@ def attention_blockwise_triangular(q, k, v, q_pos, k_pos, *, window=None,
     return constrain(out.astype(q.dtype), "batch", "*", "heads", "*")
 
 
+def _attention_via_kernel(q, k, v, *, causal, window, q_block, kv_block):
+    """Adapter onto the registry's flash-attention Pallas kernel: repeat KV
+    heads (GQA), fold heads into batch, dispatch, unfold."""
+    from repro.kernels import registry
+
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    k = repeat_kv(k, h // kvh)
+    v = repeat_kv(v, h // kvh)
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
+
+    # forward overrides only when divisor-exact; else the per-shape plan wins
+    qb = q_block if (q_block and sq % min(q_block, sq) == 0) else None
+    kb = kv_block if (kv_block and sk % min(kv_block, sk) == 0) else None
+    out = registry.dispatch(
+        "attention", fold(q), fold(k), fold(v), causal=causal,
+        window=0 if window is None else int(window), prefer_ref=False,
+        q_block=qb, kv_block=kb,
+    )
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
 def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=None,
               use_banded_local: bool = False, block_threshold: int = 2048,
               q_block: int = 512, kv_block: int = 1024,
-              causal_block_skip: bool = False):
+              causal_block_skip: bool = False, impl: str = "jnp"):
     """Dispatch: dense for small/decode, blockwise for long, banded for local,
-    triangular for causal long self-attention when block-skip is enabled."""
+    triangular for causal long self-attention when block-skip is enabled.
+
+    ``impl`` picks the kernel backend: "jnp" (the default) keeps the
+    XLA paths, whose blockwise variant carries the flash custom VJP — safe
+    under autodiff.  "auto" asks the registry (Pallas on TPU for the
+    self-attention shapes the kernel covers): the Pallas kernel has no VJP
+    yet (ROADMAP), so callers pass "auto"/"pallas" only on paths that are
+    never differentiated (prefill/decode — the model layer gates this)."""
     sq, sk = q.shape[1], k.shape[1]
+    if impl == "auto":
+        from repro.kernels import registry
+
+        impl = "pallas" if registry.default_impl("attention") == "pallas" else "jnp"
+    # the Pallas kernel covers zero-offset self-attention with the default
+    # scale; everything else (decode over a cache, cross-attn, custom scale)
+    # stays on the jnp paths below
+    # the kernel's window/causal are static kwargs: a traced per-layer window
+    # (scan-carried heterogeneity) must stay on the jnp paths
+    if (impl == "pallas" and sq == sk and sq > 1 and softmax_scale is None
+            and not use_banded_local and isinstance(window, (int, type(None)))):
+        return _attention_via_kernel(q, k, v, causal=causal, window=window,
+                                     q_block=q_block, kv_block=kv_block)
     if window is not None and use_banded_local and sq == sk and sq > 2 * max(window, 128):
         return attention_banded_local(q, k, v, q_pos, k_pos, window=window,
                                       softmax_scale=softmax_scale)

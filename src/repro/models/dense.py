@@ -135,6 +135,9 @@ class DenseLM(Model):
             q_block=self.opts.q_block, kv_block=self.opts.kv_block,
             # active whenever we attend over fresh k/v (train AND prefill)
             causal_block_skip=self.opts.causal_block_skip and s > 1,
+            # the Pallas kernel has no VJP: only inference calls (prefill /
+            # decode attend over a cache) may leave the jnp flash-VJP path
+            impl=self.opts.attention_impl if k_cache is not None else "jnp",
         )
         o = jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"])
         return x + common.constrain(o, "batch", "seq", "*"), (k_cache, v_cache)
@@ -172,6 +175,11 @@ class DenseLM(Model):
                 kc = vc = None
             else:
                 pl, window, theta, kc, vc = xs
+            if cfg.sliding_window is None:
+                # all-global pattern: the scanned sentinel is a tracer, but
+                # the static fact "no window" must stay static — it gates the
+                # (static-kwarg) Pallas attention route in common.attention
+                window = None
             x, (kc2, vc2) = self._attn(pl, x, q_pos, k_pos, window, theta,
                                        k_cache=kc, v_cache=vc, write_at=write_at)
             x, a = self._ffn(pl, x)

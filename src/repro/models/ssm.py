@@ -145,8 +145,15 @@ class SSMLM(Model):
             )
             y = y[:, None]  # (b, 1, nh, hp)
         else:
-            chunk = min(cfg.ssm_chunk, s)
-            while s % chunk != 0:  # largest divisor <= ssm_chunk
+            if cfg.ssm_chunk is None:
+                # BP leaf size from the kernel planner (the SSD chunk is the
+                # scan kernel's block applied at the model layer)
+                from repro.kernels import planner
+
+                chunk = min(planner.plan_scan((b, s), jnp.float32)["block"], s)
+            else:
+                chunk = min(cfg.ssm_chunk, s)
+            while s % chunk != 0:  # largest divisor <= the target chunk
                 chunk -= 1
             y, new_ssm = ssd_chunked(
                 x_dt, a, B.astype(jnp.float32), C.astype(jnp.float32),

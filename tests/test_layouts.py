@@ -1,6 +1,8 @@
 """BI (Morton) layout, gapping, in-order layout — unit + property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip cleanly when absent
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

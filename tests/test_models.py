@@ -32,6 +32,7 @@ def make_batch(model, b, s, rng):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_smoke(arch):
     cfg = fp32_cfg(arch)
@@ -66,6 +67,7 @@ def test_prefill_decode_consistency(arch):
     assert logits_a.shape == (b, cfg.vocab_size)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_microbatched_loss_matches(arch):
     """Gradient accumulation must not change the CE loss value.  (The MoE
@@ -108,6 +110,7 @@ def test_banded_local_attention_matches_masked():
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_hybrid_windowed_decode_cache_matches_full():
     """Ring-buffer cache decode == full cache decode for recurrentgemma."""
     cfg = dataclasses.replace(get_smoke_config("recurrentgemma-2b"), dtype="float32")

@@ -20,6 +20,7 @@ def small_mesh():
     return make_debug_mesh(1, tp=1)
 
 
+@pytest.mark.slow
 def test_training_loss_decreases(tmp_path):
     cfg = get_smoke_config("qwen3-1.7b")
     out = train(cfg, mesh=small_mesh(), steps=15,
@@ -30,6 +31,7 @@ def test_training_loss_decreases(tmp_path):
     assert last < first, (first, last)
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_is_deterministic(tmp_path):
     cfg = get_smoke_config("qwen3-1.7b")
     data_cfg = DataConfig(global_batch=2, seq_len=32, seed=5)
@@ -60,6 +62,7 @@ def test_serving_loop():
     assert all(len(r.out) == 4 for r in reqs)
 
 
+@pytest.mark.slow
 def test_greedy_decode_matches_teacher_forcing():
     """Serving correctness: tokens produced by the decode loop equal argmax
     of teacher-forced prefill logits at each step."""

@@ -6,7 +6,10 @@ For every registered op this times:
                          — the XLA numbers that matter on this CPU container;
   * ``pallas_fixed``   — the Pallas path (interpret mode on CPU) with the
                          pre-substrate hard-coded tiles (128 / 512 / 256);
-  * ``pallas_planned`` — the Pallas path with planner-derived tiles.
+  * ``pallas_planned`` — the Pallas path with planner-derived tiles;
+  * ``pallas_tuned``   — the planned path overlaid by the persisted autotune
+                         table (``benchmarks/autotune.py`` populates it;
+                         falls back to the analytic plan on a cold cache).
 
 Interpret-mode wall times are NOT meaningful device performance; they are
 recorded so the before/after planner tiling delta is machine-checkable.  On
@@ -18,7 +21,6 @@ from __future__ import annotations
 
 import json
 import sys
-import time
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]
@@ -27,7 +29,7 @@ sys.path.insert(0, str(REPO / "src"))
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.kernels import planner, registry  # noqa: E402
+from repro.kernels import autotune, planner, registry  # noqa: E402
 
 # the hard-coded tile constants the substrate replaced, kept here as the
 # benchmark's "before" arm
@@ -41,13 +43,9 @@ LEGACY_TILES = {
 
 
 def timeit(fn, *args, iters=5):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6
+    """The autotune harness's discipline (median-of-k per-call, compile
+    excluded), shared so the arms and the search winners are comparable."""
+    return autotune.measure_us(fn, args, iters=iters)
 
 
 def _cases():
@@ -88,13 +86,27 @@ def main(json_path: str | None = None) -> dict:
         entry["ref_us"] = round(us, 1)
         print(f"kernel_{name}_ref_{case['label']},{us:.0f},{case['derived'](us)}")
 
-        for arm, tiles in (("pallas_fixed", LEGACY_TILES[name]),
-                           ("pallas_planned", {})):
-            fn = jax.jit(lambda *a, _n=name, _kw=kwargs, _t=tiles: registry.dispatch(
-                _n, *a, prefer_ref=False, **_kw, **_t))
-            us = timeit(fn, *args, iters=2)
-            entry[f"{arm}_us"] = round(us, 1)
-            print(f"kernel_{name}_{arm}_{case['label']},{us:.0f},interpret")
+        # fixed/planned arms pin the mode off: an inherited REPRO_AUTOTUNE +
+        # warm table must not overlay tuned tiles onto the comparison baseline
+        with autotune.mode_scope("off"):
+            for arm, tiles in (("pallas_fixed", LEGACY_TILES[name]),
+                               ("pallas_planned", {})):
+                fn = jax.jit(lambda *a, _n=name, _kw=kwargs, _t=tiles: registry.dispatch(
+                    _n, *a, prefer_ref=False, **_kw, **_t))
+                us = timeit(fn, *args, iters=5)
+                entry[f"{arm}_us"] = round(us, 1)
+                print(f"kernel_{name}_{arm}_{case['label']},{us:.0f},interpret")
+
+        # tuned arm: same dispatch, persisted measurements replayed on top of
+        # the plan (identical to pallas_planned when the table has no entry)
+        tuned = autotune.lookup(name, *args)
+        entry["tuned_tiles"] = autotune.snap_plan(name, args, tuned) if tuned else plan
+        with autotune.mode_scope("replay"):
+            fn = jax.jit(lambda *a, _n=name, _kw=kwargs: registry.dispatch(
+                _n, *a, prefer_ref=False, **_kw))
+            us = timeit(fn, *args, iters=5)
+        entry["pallas_tuned_us"] = round(us, 1)
+        print(f"kernel_{name}_pallas_tuned_{case['label']},{us:.0f},interpret")
         results[name] = entry
 
     dp = planner.device_params()

@@ -33,11 +33,35 @@ points, each in exactly one module:
     row-major fallback.  Used by ``hbp_matmul``, ``bi_transpose``, and
     ``flash_attention``; cross-validated against ``repro.core.layouts``.
 
+Tuning
+------
+``autotune`` closes the measure→persist→replay loop over the planner: the
+analytic plans stay the source of truth, but measured winners (searched on a
+power-of-two ladder around the analytic point, filtered by the costmodel
+envelope and each kernel's divisibility constraints) are persisted per
+``(device_kind, op, shape_class, dtype)`` as JSON under ``REPRO_TUNE_DIR``
+(default ``~/.cache/repro/autotune``) and overlaid at dispatch time.  The
+``REPRO_AUTOTUNE`` knob (mirrored by ``RunOptions.autotune``, resolved in
+``planner.resolve_run_options`` and pinned by the launchers at startup)
+selects among three modes:
+
+  * ``off``    — analytic plans only; the default for bare dispatch so
+    benchmarks and tests see the pure planner unless they opt in;
+  * ``replay`` — overlay persisted measurements; a cold cache is a no-op;
+    the launchers' startup default;
+  * ``search`` — replay, plus a table miss on concrete (non-traced) arrays
+    triggers an in-line timed search whose winner is persisted.
+
+``benchmarks/autotune.py`` populates tables across a shape sweep;
+``benchmarks/bench_kernels.py`` reports the resulting ``pallas_tuned_us``
+next to the fixed/planned arms.  Kernel signatures stay oblivious: tuning
+never adds a knob to a kernel, it only picks values for the existing ones.
+
 Kernel modules (``bp_scan``, ``hbp_matmul``, ``bi_transpose``,
 ``flash_attention``, ``bi_fft``) stay importable directly for tests and
 experiments; ``ref`` holds the pure-jnp oracles.
 """
-from repro.kernels import morton, planner, ref, registry
+from repro.kernels import autotune, morton, planner, ref, registry
 from repro.kernels.bi_fft import bi_fft
 from repro.kernels.bi_transpose import bi_transpose
 from repro.kernels.bp_scan import bp_scan
@@ -46,6 +70,7 @@ from repro.kernels.hbp_matmul import hbp_matmul
 from repro.kernels.registry import dispatch
 
 __all__ = [
+    "autotune",
     "morton",
     "planner",
     "ref",

@@ -1,0 +1,444 @@
+"""Measured autotune layer over the resource-oblivious planner.
+
+The planner (``repro.kernels.planner``) derives every tile shape analytically
+from queried device parameters pushed through the costmodel envelopes.  The
+envelopes are asymptotically right but carry constant factors (the one-third
+``_budget`` slack, the 2t-deep kv panel) that real machines disagree with —
+exactly the regime the companion RWS/false-sharing analysis (arXiv:1103.4142)
+identifies.  This module closes the loop **without touching any kernel
+signature**: kernels stay oblivious, the runtime *measures* each device's
+constants and replays them.
+
+Three pieces:
+
+``candidates(op, *args)``
+    A power-of-two ladder of tile plans around the planner's analytic point,
+    filtered by the kernels' divisibility constraints and the fast-memory
+    envelope (every candidate's working set fits the queried ``fast_bytes``).
+
+``search(op, *args)``
+    Times each candidate on the real kernel (compile excluded, median-of-k,
+    ``block_until_ready``) and records the winner in the persisted table.
+
+``overlay(op, args)``
+    The dispatch-time hook: a tuned-table hit for the current
+    ``(device_kind, op, shape_class, dtype)`` key overlays the analytic plan
+    (snapped back to the actual shape's divisibility), explicit overrides
+    still win.  Controlled by the mode knob:
+
+      * ``off``    — analytic plans only (the bare-dispatch default);
+      * ``replay`` — overlay persisted measurements; a cold cache is a no-op;
+      * ``search`` — like replay, but a table miss on concrete (non-traced)
+        arrays triggers an in-line search whose winner is persisted.
+
+    ``REPRO_AUTOTUNE`` sets the process default; launchers call
+    :func:`startup` (which resolves ``RunOptions.autotune``) and tests use
+    :func:`mode_scope`.
+
+Tables are JSON files under ``REPRO_TUNE_DIR`` (default
+``~/.cache/repro/autotune``), one per sanitized ``device_kind``.  Corrupt or
+unknown-format files are ignored, never fatal.
+
+Known limitation: the table key carries no semantic kwargs, so e.g. causal
+and non-causal attention with one shape class share an entry (the plan is
+always *correct* — only the measured optimum may differ).  Keying flags
+alongside ``shape_class`` is a ROADMAP follow-on.
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import json
+import logging
+import math
+import os
+import re
+import statistics
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import planner
+
+log = logging.getLogger("repro.autotune")
+
+MODES = ("off", "replay", "search")
+_DEFAULT_DIR = "~/.cache/repro/autotune"
+_TABLE_VERSION = 1
+
+_mode_override: Optional[str] = None
+# (tune_dir, device_kind) -> entries dict; cleared by clear_cache()
+_TABLE_CACHE: dict[tuple[str, str], dict] = {}
+
+
+# ---------------------------------------------------------------------------
+# mode knob
+# ---------------------------------------------------------------------------
+
+def resolve_mode(value: Optional[str] = None) -> str:
+    """Launcher-side resolution: explicit value > ``REPRO_AUTOTUNE`` >
+    ``replay`` (replay on a cold cache is a no-op, so it is the safe
+    startup default).  Raises on unknown modes so typos surface early."""
+    m = value or os.environ.get("REPRO_AUTOTUNE") or "replay"
+    if m not in MODES:
+        raise ValueError(f"unknown autotune mode {m!r}; expected one of {MODES}")
+    return m
+
+
+def mode() -> str:
+    """The active mode for bare dispatch: the process override if set, else
+    ``REPRO_AUTOTUNE``, else ``off`` (analytic plans only — benchmarks and
+    tests see the pure planner unless they opt in)."""
+    if _mode_override is not None:
+        return _mode_override
+    env = os.environ.get("REPRO_AUTOTUNE", "off")
+    return env if env in MODES else "off"
+
+
+def set_mode(m: Optional[str]) -> None:
+    """Set (or with ``None`` clear) the process-wide mode override."""
+    global _mode_override
+    if m is not None and m not in MODES:
+        raise ValueError(f"unknown autotune mode {m!r}; expected one of {MODES}")
+    _mode_override = m
+
+
+@contextlib.contextmanager
+def mode_scope(m: Optional[str]):
+    """Temporarily pin the mode (tests, benchmark arms)."""
+    global _mode_override
+    prev = _mode_override
+    set_mode(m)
+    try:
+        yield
+    finally:
+        _mode_override = prev
+
+
+def startup(m: Optional[str] = None) -> str:
+    """Launcher hook (serve/train): resolve and pin the mode **process-wide**
+    (every subsequent dispatch in this process replays, by design — the
+    launcher owns the runtime policy), and preload the current device's
+    table so the first dispatch trace pays no IO."""
+    resolved = resolve_mode(m)
+    set_mode(resolved)
+    if resolved != "off":
+        dp = planner.device_params()
+        log.info("autotune %s: %d tuned plan(s) for %s",
+                 resolved, len(load_table(dp.kind)), dp.kind)
+    return resolved
+
+
+# ---------------------------------------------------------------------------
+# table keys
+# ---------------------------------------------------------------------------
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def shape_class(*args) -> str:
+    """Power-of-two bucketed shape signature: nearby shapes share one table
+    entry; :func:`snap_plan` restores exact divisibility at replay time."""
+    return "_".join("x".join(str(_pow2_ceil(d)) for d in a.shape) or "scalar"
+                    for a in args)
+
+
+def entry_key(op: str, *args) -> str:
+    return f"{op}|{shape_class(*args)}|{jnp.dtype(args[0].dtype).name}"
+
+
+# ---------------------------------------------------------------------------
+# persisted tables (one JSON per device_kind under REPRO_TUNE_DIR)
+# ---------------------------------------------------------------------------
+
+def tune_dir() -> Path:
+    return Path(os.environ.get("REPRO_TUNE_DIR")
+                or os.path.expanduser(_DEFAULT_DIR))
+
+
+def table_path(kind: Optional[str] = None) -> Path:
+    kind = kind or planner.device_params().kind
+    safe = re.sub(r"[^A-Za-z0-9._-]+", "_", kind) or "device"
+    return tune_dir() / f"{safe}.json"
+
+
+def _valid_entry(entry) -> bool:
+    return (isinstance(entry, dict) and isinstance(entry.get("plan"), dict)
+            and len(entry["plan"]) > 0
+            and all(isinstance(v, int) and v > 0
+                    for v in entry["plan"].values()))
+
+
+def load_table(kind: Optional[str] = None) -> dict:
+    """The (cached) entries dict for one device kind.  Missing, corrupt, or
+    unknown-format files all yield an empty table — replay degrades to the
+    analytic plan, it never takes the process down."""
+    kind = kind or planner.device_params().kind
+    cache_key = (str(tune_dir()), kind)
+    hit = _TABLE_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
+    path = table_path(kind)
+    entries: dict = {}
+    try:
+        raw = json.loads(path.read_text())
+        if isinstance(raw, dict) and raw.get("version") == _TABLE_VERSION \
+                and isinstance(raw.get("entries"), dict):
+            entries = {k: v for k, v in raw["entries"].items()
+                       if _valid_entry(v)}
+        else:
+            log.warning("autotune: ignoring table %s (unknown format)", path)
+    except FileNotFoundError:
+        pass
+    except (OSError, ValueError) as exc:  # json.JSONDecodeError is ValueError
+        log.warning("autotune: ignoring corrupt table %s (%s)", path, exc)
+    _TABLE_CACHE[cache_key] = entries
+    return entries
+
+
+def save_table(kind: Optional[str] = None) -> Path:
+    kind = kind or planner.device_params().kind
+    entries = load_table(kind)
+    path = table_path(kind)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = {"version": _TABLE_VERSION, "device_kind": kind,
+               "entries": {k: entries[k] for k in sorted(entries)}}
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
+
+
+def clear_cache() -> None:
+    """Drop the in-process table cache (tests that redirect REPRO_TUNE_DIR)."""
+    _TABLE_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# per-op tuning metadata: which axis each tile kwarg divides, and the
+# working-set model the envelope filter checks against fast_bytes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OpTuneInfo:
+    """dims(*args) maps each tile kwarg to the axis size it must divide;
+    working_set(plan, *args) models the plan's resident bytes."""
+
+    dims: Callable[..., dict]
+    working_set: Callable[..., int]
+
+
+def _scan_dims(x):
+    return {"block": x.shape[-1]}
+
+
+def _scan_ws(plan, x):
+    return 4 * plan["block"] * jnp.dtype(x.dtype).itemsize
+
+
+def _matmul_dims(a, b):
+    return {"bm": a.shape[0], "bk": a.shape[1], "bn": b.shape[1]}
+
+
+def _matmul_ws(plan, a, b):
+    itemsize = jnp.dtype(a.dtype).itemsize
+    bm, bn, bk = plan["bm"], plan["bn"], plan["bk"]
+    return (bm * bk + bk * bn) * itemsize + 4 * bm * bn
+
+
+def _transpose_dims(x):
+    m, n = x.shape
+    return {"bt": m if m == n else math.gcd(m, n)}
+
+
+def _transpose_ws(plan, x):
+    return 2 * plan["bt"] ** 2 * jnp.dtype(x.dtype).itemsize
+
+
+def _attention_dims(q, k, v):
+    return {"q_block": q.shape[1], "kv_block": k.shape[1]}
+
+
+def _attention_ws(plan, q, k, v):
+    itemsize = jnp.dtype(q.dtype).itemsize
+    hd = q.shape[2]
+    qb, kb = plan["q_block"], plan["kv_block"]
+    # q rows + f32 acc rows, k/v panels, the f32 P tile, (m, l) columns
+    return qb * hd * (itemsize + 4) + 2 * kb * hd * itemsize \
+        + 4 * qb * kb + 8 * qb
+
+
+def _fft_dims(x):
+    return {"n1": x.shape[-1]}
+
+
+def _fft_ws(plan, x):
+    n = x.shape[-1]
+    n1 = plan["n1"]
+    n2 = max(n // max(n1, 1), 1)
+    # the two dense DFT factor matrices, (real, imag) f32 each
+    return 8 * (n1 * n1 + n2 * n2)
+
+
+_TUNE: dict[str, OpTuneInfo] = {
+    "scan": OpTuneInfo(_scan_dims, _scan_ws),
+    "matmul": OpTuneInfo(_matmul_dims, _matmul_ws),
+    "transpose": OpTuneInfo(_transpose_dims, _transpose_ws),
+    "attention": OpTuneInfo(_attention_dims, _attention_ws),
+    "fft": OpTuneInfo(_fft_dims, _fft_ws),
+}
+
+
+def tunable_ops() -> list[str]:
+    return sorted(_TUNE)
+
+
+# ---------------------------------------------------------------------------
+# candidate generation
+# ---------------------------------------------------------------------------
+
+def snap_plan(op: str, args, plan: dict) -> dict:
+    """Clamp a tuned plan (possibly recorded for a same-class neighbour
+    shape) back to the kernels' divisibility constraints: each tile becomes
+    the largest divisor of its axis not exceeding the tuned value."""
+    dims = _TUNE[op].dims(*args)
+    return {k: planner.divisor_tile(dims[k], int(v))
+            for k, v in plan.items() if k in dims}
+
+
+def candidates(op: str, *args, dp: Optional[planner.DeviceParams] = None,
+               max_candidates: int = 16, span: int = 2) -> list[dict]:
+    """Power-of-two ladder around the analytic plan: each tile kwarg ranges
+    over factor 2**±``span`` of its planned value (snapped to divisors of its
+    axis), the cross product is filtered by the fast-memory envelope and
+    ranked by log-distance from the analytic point.  The analytic plan is
+    always candidate 0."""
+    from repro.kernels import registry  # the layer below; lazy to stay acyclic
+
+    spec = registry.get(op)
+    info = _TUNE[op]
+    dp = dp or planner.device_params()
+    analytic = dict(spec.plan(*args))
+    dims = info.dims(*args)
+
+    ladders: dict[str, list[int]] = {}
+    for key, base in analytic.items():
+        vals = set()
+        for shift in range(-span, span + 1):
+            target = base << shift if shift >= 0 else max(base >> -shift, 1)
+            vals.add(planner.divisor_tile(dims[key], target))
+        ladders[key] = sorted(vals)
+
+    keys = sorted(ladders)
+    plans = []
+    for combo in itertools.product(*(ladders[k] for k in keys)):
+        plan = dict(zip(keys, combo))
+        if plan == analytic:
+            continue
+        if info.working_set(plan, *args) > dp.fast_bytes:
+            continue
+        plans.append(plan)
+
+    def dist(p: dict) -> float:
+        return sum(abs(math.log2(p[k]) - math.log2(max(analytic[k], 1)))
+                   for k in keys)
+
+    plans.sort(key=lambda p: (dist(p), tuple(p[k] for k in keys)))
+    return [analytic] + plans[:max(max_candidates - 1, 0)]
+
+
+# ---------------------------------------------------------------------------
+# timing harness
+# ---------------------------------------------------------------------------
+
+def measure_us(fn, args, *, iters: int = 5, kwargs: Optional[dict] = None) -> float:
+    """Median-of-``iters`` wall time in microseconds, compile excluded (one
+    warm-up call runs and blocks before the clock starts)."""
+    kwargs = kwargs or {}
+    jax.block_until_ready(fn(*args, **kwargs))
+    samples = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(samples)
+
+
+def _concrete(args) -> bool:
+    return not any(isinstance(a, jax.core.Tracer) for a in args)
+
+
+def search(op: str, *args, iters: int = 5, max_candidates: int = 16,
+           save: bool = True, **kwargs) -> dict:
+    """Time the candidate ladder for one op/shape on the real kernel path
+    (native where supported, interpret elsewhere), record the winner in the
+    device table, and return the table entry."""
+    from repro.kernels import registry
+
+    spec = registry.get(op)
+    if not _concrete(args):
+        raise TypeError(f"autotune.search({op!r}) needs concrete arrays, "
+                        "not tracers")
+    dp = planner.device_params()
+    interpret = not spec.supported()
+    cands = candidates(op, *args, dp=dp, max_candidates=max_candidates)
+    timed = []
+    for plan in cands:
+        try:
+            us = measure_us(spec.pallas, args, iters=iters,
+                            kwargs={**kwargs, "interpret": interpret, **plan})
+        except Exception as exc:
+            # the envelope filter allows working sets up to the full queried
+            # fast memory (the wins live beyond the planner's 1/3 slack), so
+            # a near-limit candidate may fail native compilation — skip it,
+            # never abort the sweep
+            log.warning("autotune %s: candidate %s failed (%s); skipping",
+                        op, plan, exc)
+            continue
+        timed.append((us, plan))
+    if not timed:
+        raise RuntimeError(f"autotune {op}: every candidate failed to run")
+    best_us, best = min(timed, key=lambda t: t[0])
+    analytic = cands[0]
+    analytic_us = next((us for us, p in timed if p == analytic), None)
+    entry = {
+        "plan": best,
+        "us": round(best_us, 1),
+        "analytic_plan": analytic,
+        "analytic_us": None if analytic_us is None else round(analytic_us, 1),
+        "iters": iters,
+        "candidates": len(cands),
+    }
+    table = load_table(dp.kind)
+    table[entry_key(op, *args)] = entry
+    if save:
+        save_table(dp.kind)
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# dispatch-time overlay (the integration point for registry.dispatch)
+# ---------------------------------------------------------------------------
+
+def lookup(op: str, *args) -> Optional[dict]:
+    """The persisted tuned plan for this op/shape-class/dtype, or None."""
+    entry = load_table().get(entry_key(op, *args))
+    return dict(entry["plan"]) if entry else None
+
+
+def overlay(op: str, args, *, search_kwargs: Optional[dict] = None) -> dict:
+    """Tuned tile kwargs to merge over the analytic plan (empty dict when
+    the mode is off, the op is untunable, or the cache is cold).  In
+    ``search`` mode a miss on concrete arrays triggers an in-line search."""
+    m = mode()
+    if m == "off" or op not in _TUNE:
+        return {}
+    plan = lookup(op, *args)
+    if plan is None and m == "search" and _concrete(args):
+        plan = dict(search(op, *args, **(search_kwargs or {}))["plan"])
+    if plan is None:
+        return {}
+    return snap_plan(op, args, plan)

@@ -58,17 +58,70 @@ class DeviceParams:
         return max(32 // max(itemsize, 1), 8)
 
 
+# device_params is memoized: every dispatch trace asks for it, and
+# ``jax.devices()`` is not free.  The REPRO_FAST_BYTES value participates in
+# the cache key so flipping the env var takes effect without a clear, but
+# tests that monkeypatch deeper (fake devices, backend swaps) should call
+# ``clear_device_params_cache()``.
+_DP_CACHE: dict = {}
+
+
 def device_params(device=None) -> DeviceParams:
-    """Query the current device.  ``REPRO_FAST_BYTES`` overrides the
-    fast-memory size (useful to replay a plan for a different machine)."""
+    """Query the current device (memoized).  ``REPRO_FAST_BYTES`` overrides
+    the fast-memory size (useful to replay a plan for a different machine);
+    otherwise ``device.memory_stats()`` is consulted when the backend
+    exposes it, falling back to the per-platform defaults."""
+    env = os.environ.get("REPRO_FAST_BYTES")
+    cache_key = (device, env)
+    try:
+        return _DP_CACHE[cache_key]
+    except (KeyError, TypeError):  # TypeError: unhashable fake device
+        pass
     dev = device if device is not None else jax.devices()[0]
     platform = getattr(dev, "platform", "cpu")
     kind = getattr(dev, "device_kind", platform)
-    env = os.environ.get("REPRO_FAST_BYTES")
-    fast = int(env) if env else _DEFAULT_FAST_BYTES.get(platform, 8 * 2**20)
+    if env:
+        fast = int(env)
+    else:
+        fast = (_queried_fast_bytes(dev, platform)
+                or _DEFAULT_FAST_BYTES.get(platform, 8 * 2**20))
     line = _DEFAULT_LINE_BYTES.get(platform, 64)
-    return DeviceParams(platform=platform, kind=kind, fast_bytes=fast,
-                        line_bytes=line)
+    dp = DeviceParams(platform=platform, kind=kind, fast_bytes=fast,
+                      line_bytes=line)
+    try:
+        _DP_CACHE[cache_key] = dp
+    except TypeError:
+        pass
+    return dp
+
+
+def clear_device_params_cache() -> None:
+    """Drop memoized device queries (tests that fake devices or change the
+    backend under the planner)."""
+    _DP_CACHE.clear()
+
+
+def _queried_fast_bytes(dev, platform: str):
+    """Real fast-memory size from ``device.memory_stats()`` when the backend
+    reports one.  An explicit fast-memory key wins outright; a ``bytes_limit``
+    below the platform default shrinks it (the device genuinely has less),
+    while HBM-sized limits are ignored — they are not the M the O(sqrt M)
+    tile envelopes need."""
+    try:
+        stats = dev.memory_stats()
+    except Exception:
+        return None
+    if not isinstance(stats, dict):
+        return None
+    for key in ("vmem_size_bytes", "fast_memory_bytes"):
+        val = stats.get(key)
+        if isinstance(val, (int, float)) and val > 0:
+            return int(val)
+    default = _DEFAULT_FAST_BYTES.get(platform, 8 * 2**20)
+    limit = stats.get("bytes_limit")
+    if isinstance(limit, (int, float)) and 0 < limit < default:
+        return int(limit)
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -214,14 +267,19 @@ def default_attention_blocks(dp: Optional[DeviceParams] = None,
 
 def resolve_run_options(opts, *, head_dim: int = 128, dtype=jnp.bfloat16):
     """Fill planner-owned ``None`` fields of a ``RunOptions``-like frozen
-    dataclass (q_block, kv_block) from the queried device and the model's
-    actual head_dim / activation dtype.  Idempotent."""
-    if opts.q_block is not None and opts.kv_block is not None:
-        return opts
-    qb, kb = default_attention_blocks(head_dim=head_dim, dtype=dtype)
+    dataclass (q_block, kv_block, autotune) from the queried device and the
+    model's actual head_dim / activation dtype.  Idempotent."""
     updates = {}
-    if opts.q_block is None:
-        updates["q_block"] = qb
-    if opts.kv_block is None:
-        updates["kv_block"] = kb
+    if opts.q_block is None or opts.kv_block is None:
+        qb, kb = default_attention_blocks(head_dim=head_dim, dtype=dtype)
+        if opts.q_block is None:
+            updates["q_block"] = qb
+        if opts.kv_block is None:
+            updates["kv_block"] = kb
+    if getattr(opts, "autotune", "off") is None:
+        from repro.kernels import autotune  # layered above the planner
+
+        updates["autotune"] = autotune.resolve_mode()
+    if not updates:
+        return opts
     return dataclasses.replace(opts, **updates)

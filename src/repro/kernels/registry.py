@@ -16,6 +16,8 @@ online-softmax reduce.
 """
 from __future__ import annotations
 
+import os
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Optional, Tuple
 
@@ -77,19 +79,46 @@ def default_impl(name: str) -> str:
     return "pallas" if get(name).supported() else "ref"
 
 
+# ops already warned about dropped overrides (warn once per op, not per trace)
+_WARNED_DROPPED: set[str] = set()
+
+
+def _check_dropped_overrides(name: str, overrides: dict) -> None:
+    """The oracle takes semantic kwargs only, so explicit tile overrides on
+    the ref path never reach a kernel.  Silence here means an experiment can
+    read 'fixed-tile' numbers that actually ran the un-tiled oracle — warn
+    once per op, or raise outright under ``REPRO_STRICT_TILES``."""
+    dropped = sorted(k for k, v in overrides.items() if v is not None)
+    if not dropped:
+        return
+    msg = (f"dispatch({name!r}): tile override(s) {dropped} ignored on the "
+           "ref path (the oracle takes semantic kwargs only); pass "
+           "prefer_ref=False to exercise the tiles")
+    if os.environ.get("REPRO_STRICT_TILES"):
+        raise ValueError(msg)
+    if name not in _WARNED_DROPPED:
+        _WARNED_DROPPED.add(name)
+        warnings.warn(msg, stacklevel=3)
+
+
 def dispatch(name: str, *args, prefer_ref: Optional[bool] = None,
              interpret: Optional[bool] = None, **kwargs):
     """Generic dispatch: oracle when ``prefer_ref`` (default: whenever the
     Pallas path would not compile natively), else the Pallas kernel with
-    planner-derived tiles under any explicit tile overrides."""
+    planner-derived tiles, overlaid by any persisted autotune measurement
+    (``repro.kernels.autotune``), under any explicit tile overrides."""
     spec = get(name)
     native = spec.supported()
     if prefer_ref is None:
         prefer_ref = not native
     overrides = {k: kwargs.pop(k) for k in list(kwargs) if k in spec.pallas_only}
     if prefer_ref:
+        _check_dropped_overrides(name, overrides)
         return spec.ref(*args, **kwargs)
     tiles = dict(spec.plan(*args))
+    from repro.kernels import autotune  # the measured layer above dispatch
+
+    tiles.update(autotune.overlay(name, args, search_kwargs=kwargs))
     tiles.update({k: v for k, v in overrides.items() if v is not None})
     if interpret is None:
         interpret = not native

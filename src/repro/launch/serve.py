@@ -33,6 +33,7 @@ class Request:
 class Server:
     def __init__(self, cfg, mesh, *, max_batch: int = 8, max_len: int = 256,
                  opts: RunOptions = RunOptions()):
+        from repro.kernels import autotune as kernel_autotune
         from repro.kernels import planner as kernel_planner
 
         self.cfg = cfg
@@ -43,6 +44,11 @@ class Server:
         # kernel substrate; Server keeps the resolved copy for telemetry
         self.opts = kernel_planner.resolve_run_options(
             opts, head_dim=cfg.head_dim_, dtype=cfg.activation_dtype)
+        # replay persisted measured tile plans for this device (no-op on a
+        # cold cache).  Note "search" only fills the table from *eager*
+        # dispatches — under jax.jit (all serving steps) it degrades to
+        # replay; populate tables with benchmarks/autotune.py instead
+        kernel_autotune.startup(self.opts.autotune)
         self.model = build_model(cfg, self.opts)
         self.rules = default_rules(mesh)
 

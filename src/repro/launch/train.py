@@ -65,6 +65,13 @@ def train(cfg, *, mesh, steps: int, data_cfg: DataConfig,
           opts: RunOptions = RunOptions(), opt_cfg: AdamWConfig = AdamWConfig(),
           ckpt_dir: str | None = None, save_every: int = 0,
           log_every: int = 10) -> dict:
+    from repro.kernels import autotune as kernel_autotune
+
+    # replay persisted measured tile plans for this device before the first
+    # trace (no-op on a cold cache); RunOptions.autotune / REPRO_AUTOTUNE
+    # select off/replay/search
+    kernel_autotune.startup(opts.autotune)
+
     ds = SyntheticLMDataset(data_cfg, cfg)
     example = ds.batch_at(0)
 

@@ -32,6 +32,11 @@ class RunOptions:
     # kernel backend for attention: "auto" consults the kernel registry
     # (Pallas on TPU, jnp blockwise elsewhere); "jnp" | "pallas" force
     attention_impl: str = "auto"
+    # measured-autotune mode for kernel dispatch: "off" | "replay" | "search";
+    # None = resolved by the kernel planner (REPRO_AUTOTUNE, default "replay",
+    # a no-op on a cold tile cache).  Launchers pin the resolved mode at
+    # startup via repro.kernels.autotune.startup.
+    autotune: Optional[str] = None
     # beyond-paper optimizations (off in the baseline)
     use_banded_local: bool = False  # banded sliding-window attention
     causal_block_skip: bool = False  # triangular blockwise attention

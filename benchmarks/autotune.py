@@ -54,7 +54,13 @@ def _sweep() -> dict[str, list[tuple]]:
         "attention": [((n(8, (8, 512, 64)), n(9, (8, 512, 64)),
                         n(10, (8, 512, 64))), {"causal": False, "window": 0}),
                       ((n(11, (4, 256, 64)), n(12, (4, 256, 64)),
-                        n(13, (4, 256, 64))), {"causal": True, "window": 0})],
+                        n(13, (4, 256, 64))), {"causal": True, "window": 0}),
+                      # decode regime (bench_kernels' attention_decode arm):
+                      # one query row over a mostly-full cache
+                      ((n(16, (8, 1, 64)), n(17, (8, 1024, 64)),
+                        n(18, (8, 1024, 64))),
+                       {"causal": True, "window": 0,
+                        "q_offset": 999, "kv_len": 1000})],
         "fft": [((c(14, (4, 1024)),), {}),
                 ((c(15, (4, 512)),), {})],
     }

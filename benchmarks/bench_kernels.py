@@ -38,6 +38,7 @@ LEGACY_TILES = {
     "matmul": {"bm": 128, "bn": 128, "bk": 128},
     "transpose": {"bt": 128},
     "attention": {"q_block": 256, "kv_block": 256},
+    "attention_decode": {"q_block": 256, "kv_block": 256},
     "fft": {"n1": 1},  # pre-substrate: no four-step split (one dense DFT)
 }
 
@@ -49,6 +50,8 @@ def timeit(fn, *args, iters=5):
 
 
 def _cases():
+    """Arm name -> case.  ``op`` is the registry op the arm dispatches (the
+    decode arm reuses ``attention`` with a query offset over a KV cache)."""
     key = jax.random.key
     x = jax.random.normal(key(0), (8, 8192), jnp.float32)
     a = jax.random.normal(key(1), (512, 512), jnp.float32)
@@ -56,19 +59,32 @@ def _cases():
     q = jax.random.normal(key(3), (8, 512, 64), jnp.float32)
     k = jax.random.normal(key(4), (8, 512, 64), jnp.float32)
     v = jax.random.normal(key(5), (8, 512, 64), jnp.float32)
+    # decode regime: one query row per head over a mostly-full 1024-slot
+    # cache (static kv_len -> the kernel's planner-aware grid shrink)
+    qd = jax.random.normal(key(8), (8, 1, 64), jnp.float32)
+    kc = jax.random.normal(key(9), (8, 1024, 64), jnp.float32)
+    vc = jax.random.normal(key(10), (8, 1024, 64), jnp.float32)
+    kv_len = 1000
     xc = (jax.random.normal(key(6), (4, 1024))
           + 1j * jax.random.normal(key(7), (4, 1024))).astype(jnp.complex64)
     return {
-        "scan": dict(args=(x,), kwargs={}, label="8x8192",
+        "scan": dict(op="scan", args=(x,), kwargs={}, label="8x8192",
                      derived=lambda us: f"{x.size * 4 * 2 / (us / 1e6) / 1e9:.2f}GB/s"),
-        "matmul": dict(args=(a, b), kwargs={}, label="512",
+        "matmul": dict(op="matmul", args=(a, b), kwargs={}, label="512",
                        derived=lambda us: f"{2 * 512**3 / (us / 1e6) / 1e9:.1f}GFLOP/s"),
-        "transpose": dict(args=(a,), kwargs={}, label="512",
+        "transpose": dict(op="transpose", args=(a,), kwargs={}, label="512",
                           derived=lambda us: f"{a.size * 4 * 2 / (us / 1e6) / 1e9:.2f}GB/s"),
-        "attention": dict(args=(q, k, v), kwargs={"causal": False, "window": 0},
+        "attention": dict(op="attention", args=(q, k, v),
+                          kwargs={"causal": False, "window": 0},
                           label="8x512x64",
                           derived=lambda us: f"{4 * 8 * 512 * 512 * 64 / (us / 1e6) / 1e9:.1f}GFLOP/s"),
-        "fft": dict(args=(xc,), kwargs={}, label="4x1024",
+        "attention_decode": dict(op="attention", args=(qd, kc, vc),
+                                 kwargs={"causal": True, "window": 0,
+                                         "q_offset": kv_len - 1,
+                                         "kv_len": kv_len},
+                                 label="8x1q_1024kv",
+                                 derived=lambda us: f"{4 * 8 * kv_len * 64 / (us / 1e6) / 1e9:.2f}GFLOP/s"),
+        "fft": dict(op="fft", args=(xc,), kwargs={}, label="4x1024",
                     derived=lambda us: f"{5 * 4 * 1024 * 10 / (us / 1e6) / 1e9:.2f}GFLOP/s"),
     }
 
@@ -76,11 +92,11 @@ def _cases():
 def main(json_path: str | None = None) -> dict:
     results: dict[str, dict] = {}
     for name, case in _cases().items():
-        args, kwargs = case["args"], case["kwargs"]
-        plan = dict(registry.get(name).plan(*args))
-        entry: dict = {"shape": case["label"], "planned_tiles": plan}
+        op, args, kwargs = case["op"], case["args"], case["kwargs"]
+        plan = dict(registry.get(op).plan(*args))
+        entry: dict = {"op": op, "shape": case["label"], "planned_tiles": plan}
 
-        ref_fn = jax.jit(lambda *a, _n=name, _kw=kwargs: registry.dispatch(
+        ref_fn = jax.jit(lambda *a, _n=op, _kw=kwargs: registry.dispatch(
             _n, *a, prefer_ref=True, **_kw))
         us = timeit(ref_fn, *args)
         entry["ref_us"] = round(us, 1)
@@ -91,18 +107,19 @@ def main(json_path: str | None = None) -> dict:
         with autotune.mode_scope("off"):
             for arm, tiles in (("pallas_fixed", LEGACY_TILES[name]),
                                ("pallas_planned", {})):
-                fn = jax.jit(lambda *a, _n=name, _kw=kwargs, _t=tiles: registry.dispatch(
+                fn = jax.jit(lambda *a, _n=op, _kw=kwargs, _t=tiles: registry.dispatch(
                     _n, *a, prefer_ref=False, **_kw, **_t))
                 us = timeit(fn, *args, iters=5)
                 entry[f"{arm}_us"] = round(us, 1)
                 print(f"kernel_{name}_{arm}_{case['label']},{us:.0f},interpret")
 
         # tuned arm: same dispatch, persisted measurements replayed on top of
-        # the plan (identical to pallas_planned when the table has no entry)
-        tuned = autotune.lookup(name, *args)
-        entry["tuned_tiles"] = autotune.snap_plan(name, args, tuned) if tuned else plan
+        # the plan (identical to pallas_planned when the table has no entry);
+        # the lookup keys the semantic kwargs (masking regime / decode flag)
+        tuned = autotune.lookup(op, *args, kwargs=kwargs)
+        entry["tuned_tiles"] = autotune.snap_plan(op, args, tuned) if tuned else plan
         with autotune.mode_scope("replay"):
-            fn = jax.jit(lambda *a, _n=name, _kw=kwargs: registry.dispatch(
+            fn = jax.jit(lambda *a, _n=op, _kw=kwargs: registry.dispatch(
                 _n, *a, prefer_ref=False, **_kw))
             us = timeit(fn, *args, iters=5)
         entry["pallas_tuned_us"] = round(us, 1)

@@ -15,7 +15,16 @@ points, each in exactly one module:
     kwargs (``bm``/``bn``/``bk``, ``block``, ``bt``, ``q_block``/
     ``kv_block``, ``n1``) win over the plan.
     ``default_impl(name)`` exposes the choice to callers that keep their
-    own jnp path (e.g. blockwise attention with its custom VJP).
+    own jnp path (e.g. blockwise attention with its custom VJP), and
+    ``KernelSpec.has_vjp`` marks ops whose Pallas path is itself safe
+    under autodiff.  ``attention`` is: the flash kernel registers a
+    recomputation-style backward (dq over the forward's grid, dk/dv over
+    the transposed KV-outer grid) and covers cached decode via two
+    semantic kwargs — ``q_offset`` (absolute position of query row 0,
+    traced scalars welcome) and ``kv_len`` (valid KV prefix; static
+    values shrink the KV grid itself, traced ones skip dead blocks with
+    ``pl.when``) — so serving prefill/decode and training all dispatch
+    through the same kernel.
 
 ``planner``
     Derives every tile shape at trace time from *queried* device parameters
@@ -39,8 +48,12 @@ Tuning
 analytic plans stay the source of truth, but measured winners (searched on a
 power-of-two ladder around the analytic point, filtered by the costmodel
 envelope and each kernel's divisibility constraints) are persisted per
-``(device_kind, op, shape_class, dtype)`` as JSON under ``REPRO_TUNE_DIR``
-(default ``~/.cache/repro/autotune``) and overlaid at dispatch time.  The
+``(device_kind, op, shape_class, dtype, semantic flags)`` as JSON under
+``REPRO_TUNE_DIR`` (default ``~/.cache/repro/autotune``) and overlaid at
+dispatch time.  Attention keys its causal/window kwargs and a derived
+decode marker, so masking regimes never share a measured optimum; tables
+are stamped with ``jax.__version__`` and a stamp mismatch (toolchain
+upgrade) reads as a cold cache.  The
 ``REPRO_AUTOTUNE`` knob (mirrored by ``RunOptions.autotune``, resolved in
 ``planner.resolve_run_options`` and pinned by the launchers at startup)
 selects among three modes:

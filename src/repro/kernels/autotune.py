@@ -39,10 +39,12 @@ Tables are JSON files under ``REPRO_TUNE_DIR`` (default
 ``~/.cache/repro/autotune``), one per sanitized ``device_kind``.  Corrupt or
 unknown-format files are ignored, never fatal.
 
-Known limitation: the table key carries no semantic kwargs, so e.g. causal
-and non-causal attention with one shape class share an entry (the plan is
-always *correct* — only the measured optimum may differ).  Keying flags
-alongside ``shape_class`` is a ROADMAP follow-on.
+Table keys carry the op's *semantic* flags alongside the shape class
+(``attention`` keys causal, window, and a decode marker — sq != sk), so
+masking regimes and cached-decode shapes no longer share one measured
+optimum.  Tables are also stamped with ``jax.__version__`` on write;
+a table written by a different jaxlib/toolchain (or the pre-flag key
+format, table version 1) is treated as a cold cache rather than replayed.
 """
 from __future__ import annotations
 
@@ -68,11 +70,17 @@ log = logging.getLogger("repro.autotune")
 
 MODES = ("off", "replay", "search")
 _DEFAULT_DIR = "~/.cache/repro/autotune"
-_TABLE_VERSION = 1
+# v2: semantic flags joined the key format; v1 tables are ignored (cold)
+_TABLE_VERSION = 2
 
 _mode_override: Optional[str] = None
 # (tune_dir, device_kind) -> entries dict; cleared by clear_cache()
 _TABLE_CACHE: dict[tuple[str, str], dict] = {}
+
+# per-op semantic kwargs folded into the table key (masking regime changes
+# the measured optimum even at one shape class), with the kernel-signature
+# defaults so omitted kwargs key identically to explicitly-passed defaults
+_SEM_FLAGS: dict[str, dict] = {"attention": {"causal": True, "window": 0}}
 
 
 # ---------------------------------------------------------------------------
@@ -148,8 +156,29 @@ def shape_class(*args) -> str:
                     for a in args)
 
 
-def entry_key(op: str, *args) -> str:
-    return f"{op}|{shape_class(*args)}|{jnp.dtype(args[0].dtype).name}"
+def sem_class(op: str, args, kwargs: Optional[dict] = None) -> str:
+    """Semantic-flag suffix of the table key: the op's masking/regime kwargs
+    (static Python scalars only — traced values key as ``?``), plus derived
+    shape-regime markers (attention: ``decode`` when sq != sk)."""
+    kwargs = kwargs or {}
+    parts = []
+    for flag, default in _SEM_FLAGS.get(op, {}).items():
+        v = kwargs.get(flag)
+        if v is None:
+            v = default  # omitted == kernel default: one key per config
+        if isinstance(v, (bool, int, str)):
+            parts.append(f"{flag}={v}")
+        else:
+            parts.append(f"{flag}=?")
+    if op == "attention":
+        parts.append(f"decode={args[0].shape[1] != args[1].shape[1]}")
+    return ",".join(parts)
+
+
+def entry_key(op: str, *args, kwargs: Optional[dict] = None) -> str:
+    base = f"{op}|{shape_class(*args)}|{jnp.dtype(args[0].dtype).name}"
+    sem = sem_class(op, args, kwargs)
+    return f"{base}|{sem}" if sem else base
 
 
 # ---------------------------------------------------------------------------
@@ -175,9 +204,11 @@ def _valid_entry(entry) -> bool:
 
 
 def load_table(kind: Optional[str] = None) -> dict:
-    """The (cached) entries dict for one device kind.  Missing, corrupt, or
-    unknown-format files all yield an empty table — replay degrades to the
-    analytic plan, it never takes the process down."""
+    """The (cached) entries dict for one device kind.  Missing, corrupt,
+    unknown-format, or stale files (a different table version or a
+    ``jax_version`` stamp from another jaxlib/toolchain — tuned timings do
+    not survive compiler upgrades) all yield an empty table — replay
+    degrades to the analytic plan, it never takes the process down."""
     kind = kind or planner.device_params().kind
     cache_key = (str(tune_dir()), kind)
     hit = _TABLE_CACHE.get(cache_key)
@@ -187,12 +218,16 @@ def load_table(kind: Optional[str] = None) -> dict:
     entries: dict = {}
     try:
         raw = json.loads(path.read_text())
-        if isinstance(raw, dict) and raw.get("version") == _TABLE_VERSION \
-                and isinstance(raw.get("entries"), dict):
+        if not (isinstance(raw, dict) and raw.get("version") == _TABLE_VERSION
+                and isinstance(raw.get("entries"), dict)):
+            log.warning("autotune: ignoring table %s (unknown format)", path)
+        elif raw.get("jax_version") != jax.__version__:
+            log.warning("autotune: ignoring table %s (tuned under jax %s, "
+                        "running %s — treating as cold)", path,
+                        raw.get("jax_version"), jax.__version__)
+        else:
             entries = {k: v for k, v in raw["entries"].items()
                        if _valid_entry(v)}
-        else:
-            log.warning("autotune: ignoring table %s (unknown format)", path)
     except FileNotFoundError:
         pass
     except (OSError, ValueError) as exc:  # json.JSONDecodeError is ValueError
@@ -207,6 +242,7 @@ def save_table(kind: Optional[str] = None) -> Path:
     path = table_path(kind)
     path.parent.mkdir(parents=True, exist_ok=True)
     payload = {"version": _TABLE_VERSION, "device_kind": kind,
+               "jax_version": jax.__version__,
                "entries": {k: entries[k] for k in sorted(entries)}}
     path.write_text(json.dumps(payload, indent=2) + "\n")
     return path
@@ -413,7 +449,7 @@ def search(op: str, *args, iters: int = 5, max_candidates: int = 16,
         "candidates": len(cands),
     }
     table = load_table(dp.kind)
-    table[entry_key(op, *args)] = entry
+    table[entry_key(op, *args, kwargs=kwargs)] = entry
     if save:
         save_table(dp.kind)
     return entry
@@ -423,9 +459,11 @@ def search(op: str, *args, iters: int = 5, max_candidates: int = 16,
 # dispatch-time overlay (the integration point for registry.dispatch)
 # ---------------------------------------------------------------------------
 
-def lookup(op: str, *args) -> Optional[dict]:
-    """The persisted tuned plan for this op/shape-class/dtype, or None."""
-    entry = load_table().get(entry_key(op, *args))
+def lookup(op: str, *args, kwargs: Optional[dict] = None) -> Optional[dict]:
+    """The persisted tuned plan for this op/shape-class/dtype/flags, or
+    None.  ``kwargs`` are the call's semantic kwargs (they key the masking
+    regime — see :func:`sem_class`)."""
+    entry = load_table().get(entry_key(op, *args, kwargs=kwargs))
     return dict(entry["plan"]) if entry else None
 
 
@@ -436,7 +474,7 @@ def overlay(op: str, args, *, search_kwargs: Optional[dict] = None) -> dict:
     m = mode()
     if m == "off" or op not in _TUNE:
         return {}
-    plan = lookup(op, *args)
+    plan = lookup(op, *args, kwargs=search_kwargs)
     if plan is None and m == "search" and _concrete(args):
         plan = dict(search(op, *args, **(search_kwargs or {}))["plan"])
     if plan is None:

@@ -10,18 +10,50 @@ panels (the §3.2 block-sharing argument applied to the schedule); row-major
 fallback otherwise.  The KV sweep for one (b, q) pair always stays
 contiguous (the scratch accumulator requires it).
 
+Cached decode (serving) is covered by two kwargs:
+
+``q_offset``
+    Absolute position of query row 0 (``q`` row ``i`` sits at position
+    ``q_offset + i``; keys sit at positions ``0..sk-1``).  May be a traced
+    scalar — the decode loop's ``pos`` — passed to the kernel through SMEM,
+    so per-step offsets never recompile.
+
+``kv_len``
+    Number of valid KV slots; keys at or beyond it are masked.  A *static*
+    ``kv_len`` shrinks the KV grid itself (the planner-aware grid: only
+    ``ceil(kv_len / kv_block)`` blocks are ever visited); a traced one keeps
+    the full grid and skips dead blocks with ``pl.when`` (no recompiles
+    across decode steps).
+
+A query row with every key masked (possible when ``window > 0`` and
+``q_offset`` outruns ``kv_len``) returns zeros — masked probabilities are
+explicitly zeroed so the ``l`` accumulator stays 0 and the ``l_safe`` guard
+emits 0, matching ``ref.flash_attention_ref``.
+
+The kernel carries a custom VJP (registered per static config): the
+recomputation-style flash backward — forward also emits the per-row LSE,
+backward recomputes P per block from (q, k, lse) and produces dq (KV-sweep
+grid) and dk/dv (q-sweep grid) without ever materializing an O(sq*sk)
+tensor.  ``impl="auto"`` attention therefore no longer needs to route
+around the kernel under autodiff.
+
 Supports GQA by passing pre-repeated or per-head-group K/V slices from the
-model adapter.  ``q_block=None`` / ``kv_block=None`` (the defaults) plan
-the blocks from the queried device via ``repro.kernels.planner``.
+model adapter (the repeat is jnp-level, so KV-head gradients fold back via
+autodiff of the adapter).  ``q_block=None`` / ``kv_block=None`` (the
+defaults) plan the blocks from the queried device via
+``repro.kernels.planner``; ragged sequence lengths snap each block down to
+the largest divisor of its axis instead of asserting, and a degenerate
+snap (prime-ish lengths) falls back to the jnp oracle.
 """
 from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -30,9 +62,43 @@ from repro.kernels.morton import grid_decode
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, window: int, q_block: int,
-                  kv_block: int, nk: int, decode):
+def _mask(qoff, kvlen, qi, kb, *, causal, window, q_block, kv_block,
+          full_len):
+    """(q_block, kv_block) validity mask from block coordinates and the SMEM
+    scalars; shared by the forward and both backward kernels so the three
+    recomputations of P agree bit-for-bit.  ``full_len`` (static: kv_len
+    covers the whole KV axis) drops the validity term; with no causal/window
+    masking either, returns None — the caller skips masking entirely, so
+    plain self-attention pays nothing for the decode machinery."""
+    if full_len and not causal and window <= 0:
+        return None
+    q_pos = qoff + qi * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 0)
+    k_pos = kb * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1)
+    ok = None if full_len else (k_pos < kvlen)
+    if causal:
+        c = k_pos <= q_pos
+        ok = c if ok is None else ok & c
+    if window > 0:
+        w = k_pos > q_pos - window
+        ok = w if ok is None else ok & w
+    return ok
+
+
+def _run_kv_block(body, kb, kvlen, *, kv_block, full_len):
+    """Run ``body`` for one KV block, skipping blocks past ``kv_len`` via
+    ``pl.when`` — unless the static config says every block is live."""
+    if full_len:
+        body()
+    else:
+        pl.when(kb * kv_block < kvlen)(body)
+
+
+def _flash_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+                  window: int, q_block: int, kv_block: int, nk: int,
+                  full_len: bool, decode):
     kb = pl.program_id(1)
 
     @pl.when(kb == 0)
@@ -41,65 +107,154 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)  # (q_block, hd)
-    k = k_ref[0].astype(jnp.float32)  # (kv_block, hd)
-    v = v_ref[0].astype(jnp.float32)
-
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-
+    qoff, kvlen = qoff_ref[0], kvlen_ref[0]
     _, qi = decode(pl.program_id(0))
-    q_pos = qi * q_block + jax.lax.broadcasted_iota(
-        jnp.int32, (q_block, kv_block), 0)
-    k_pos = kb * kv_block + jax.lax.broadcasted_iota(
-        jnp.int32, (q_block, kv_block), 1)
-    ok = jnp.ones((q_block, kv_block), jnp.bool_)
-    if causal:
-        ok &= k_pos <= q_pos
-    if window > 0:
-        ok &= k_pos > q_pos - window
-    s = jnp.where(ok, s, NEG_INF)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    p = jnp.exp(s - m_new[:, None])
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
-    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (q_block, hd)
+        k = k_ref[0].astype(jnp.float32)  # (kv_block, hd)
+        v = v_ref[0].astype(jnp.float32)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        ok = _mask(qoff, kvlen, qi, kb, causal=causal, window=window,
+                   q_block=q_block, kv_block=kv_block, full_len=full_len)
+        if ok is not None:
+            s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        if ok is not None:
+            # explicit zero at masked slots: when a row is fully masked m_new
+            # is still NEG_INF and exp(s - m_new) would be 1, silently
+            # averaging v
+            p = jnp.where(ok, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    _run_kv_block(_body, kb, kvlen, kv_block=kv_block, full_len=full_len)
 
     @pl.when(kb == nk - 1)
     def _emit():
         l_safe = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_ref[...] + jnp.log(l_safe)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
-                                             "kv_block", "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0,
-                    q_block: Optional[int] = None,
-                    kv_block: Optional[int] = None,
-                    interpret: bool = True) -> jax.Array:
-    """q: (bh, sq, hd); k, v: (bh, sk, hd) — heads pre-folded into batch
-    (GQA repeat handled by the caller).  Returns (bh, sq, hd)."""
+def _probs_from_lse(s, ok, lse):
+    """exp(s - lse) = softmax probs (lse folds the l normalizer); the
+    explicit zero guards fully-masked rows where lse ~ NEG_INF."""
+    p = jnp.exp(s - lse[:, None])
+    return p if ok is None else jnp.where(ok, p, 0.0)
+
+
+def _bwd_dq_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
+                   delta_ref, dq_ref, dq_acc, *, scale: float, causal: bool,
+                   window: int, q_block: int, kv_block: int, nk: int,
+                   full_len: bool, decode):
+    """dq = sum over KV blocks of (P * (dO K^T... ) ) — same grid shape and
+    schedule as the forward, accumulating dq in scratch."""
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    qoff, kvlen = qoff_ref[0], kvlen_ref[0]
+    _, qi = decode(pl.program_id(0))
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        g = g_ref[0].astype(jnp.float32)
+        lse = lse_ref[0]      # (q_block,) f32
+        delta = delta_ref[0]  # (q_block,) f32 rowsum(dO * O)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        ok = _mask(qoff, kvlen, qi, kb, causal=causal, window=window,
+                   q_block=q_block, kv_block=kv_block, full_len=full_len)
+        if ok is not None:
+            s = jnp.where(ok, s, NEG_INF)
+        p = _probs_from_lse(s, ok, lse)
+        dp = jnp.dot(g, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dq_acc[...] += jnp.dot(ds, k, preferred_element_type=jnp.float32)
+
+    _run_kv_block(_body, kb, kvlen, kv_block=kv_block, full_len=full_len)
+
+    @pl.when(kb == nk - 1)
+    def _emit():
+        dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
+                    delta_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
+                    causal: bool, window: int, q_block: int, kv_block: int,
+                    nq: int, full_len: bool, decode):
+    """dk/dv: the transposed sweep — outer grid over (bh, nk) KV tiles, inner
+    loop over q blocks, accumulating (kv_block, hd) dk/dv in scratch.  KV
+    blocks beyond ``kv_len`` (and, under causal masking, q blocks entirely
+    before the KV block) skip the matmuls but still emit their zeros."""
+    qi = pl.program_id(1)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    qoff, kvlen = qoff_ref[0], kvlen_ref[0]
+    _, kb = decode(pl.program_id(0))
+
+    live = None if full_len else (kb * kv_block < kvlen)
+    if causal:
+        # max q position in this q block >= min k position in this kv block
+        c = qoff + (qi + 1) * q_block - 1 >= kb * kv_block
+        live = c if live is None else live & c
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        g = g_ref[0].astype(jnp.float32)
+        lse = lse_ref[0]
+        delta = delta_ref[0]
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        ok = _mask(qoff, kvlen, qi, kb, causal=causal, window=window,
+                   q_block=q_block, kv_block=kv_block, full_len=full_len)
+        if ok is not None:
+            s = jnp.where(ok, s, NEG_INF)
+        p = _probs_from_lse(s, ok, lse)
+        dv_acc[...] += jnp.dot(p.T, g, preferred_element_type=jnp.float32)
+        dp = jnp.dot(g, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_acc[...] += jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+
+    if live is None:
+        _body()
+    else:
+        pl.when(live)(_body)
+
+    @pl.when(qi == nq - 1)
+    def _emit():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _fwd_call(q, k, v, qoff, kvlen, *, causal, window, q_block, kv_block,
+              nk_run, full_len, interpret):
+    """Forward pallas_call: returns (out, lse)."""
     bh, sq, hd = q.shape
-    sk = k.shape[1]
-    if q_block is None or kv_block is None:
-        from repro.kernels import planner
-
-        plan = planner.plan_attention(sq, sk, hd, q.dtype)
-        q_block = q_block if q_block is not None else plan["q_block"]
-        kv_block = kv_block if kv_block is not None else plan["kv_block"]
-    q_block = min(q_block, sq)
-    kv_block = min(kv_block, sk)
-    assert sq % q_block == 0 and sk % kv_block == 0
-    nq, nk = sq // q_block, sk // kv_block
+    nq = sq // q_block
     scale = 1.0 / math.sqrt(hd)
-
     # BI order over the flattened (bh, nq) outer grid; the KV dim stays the
     # trailing (contiguous) grid axis so the scratch combine is well-defined.
     decode = grid_decode(bh, nq)
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
 
     def q_map(g, j):
         b, i = decode(g)
@@ -109,22 +264,198 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         b, _ = decode(g)
         return (b, j, 0)
 
+    def row_map(g, j):
+        b, i = decode(g)
+        return (b, i)
+
     return pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
                           window=window, q_block=q_block, kv_block=kv_block,
-                          nk=nk, decode=decode),
-        grid=(bh * nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, q_block, hd), q_map),
-            pl.BlockSpec((1, kv_block, hd), kv_map),
-            pl.BlockSpec((1, kv_block, hd), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, q_block, hd), q_map),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+                          nk=nk_run, full_len=full_len, decode=decode),
+        grid=(bh * nq, nk_run),
+        in_specs=[smem, smem,
+                  pl.BlockSpec((1, q_block, hd), q_map),
+                  pl.BlockSpec((1, kv_block, hd), kv_map),
+                  pl.BlockSpec((1, kv_block, hd), kv_map)],
+        out_specs=[pl.BlockSpec((1, q_block, hd), q_map),
+                   pl.BlockSpec((1, q_block), row_map)],
+        out_shape=[jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+                   jax.ShapeDtypeStruct((bh, sq), jnp.float32)],
         scratch_shapes=[
             pltpu.VMEM((q_block,), jnp.float32),
             pltpu.VMEM((q_block,), jnp.float32),
             pltpu.VMEM((q_block, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(qoff, kvlen, q, k, v)
+
+
+def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
+              kv_block, nk_run, full_len, interpret):
+    """Backward pallas_calls: dq over the forward's (q-outer, kv-inner) grid,
+    dk/dv over the transposed (kv-outer, q-inner) grid."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    nq = sq // q_block
+    nk_full = sk // kv_block
+    scale = 1.0 / math.sqrt(hd)
+    delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+
+    dec_q = grid_decode(bh, nq)
+
+    def q_map(g_, j):
+        b, i = dec_q(g_)
+        return (b, i, 0)
+
+    def kv_map(g_, j):
+        b, _ = dec_q(g_)
+        return (b, j, 0)
+
+    def row_map(g_, j):
+        b, i = dec_q(g_)
+        return (b, i)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
+                          window=window, q_block=q_block, kv_block=kv_block,
+                          nk=nk_run, full_len=full_len, decode=dec_q),
+        grid=(bh * nq, nk_run),
+        in_specs=[smem, smem,
+                  pl.BlockSpec((1, q_block, hd), q_map),
+                  pl.BlockSpec((1, kv_block, hd), kv_map),
+                  pl.BlockSpec((1, kv_block, hd), kv_map),
+                  pl.BlockSpec((1, q_block, hd), q_map),
+                  pl.BlockSpec((1, q_block), row_map),
+                  pl.BlockSpec((1, q_block), row_map)],
+        out_specs=pl.BlockSpec((1, q_block, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((q_block, hd), jnp.float32)],
+        interpret=interpret,
+    )(qoff, kvlen, q, k, v, g, lse, delta)
+
+    # transposed grid: the full nk (not the shrunk run) so every dk/dv block
+    # is written — dead blocks emit the zeros their masked keys earn
+    dec_kv = grid_decode(bh, nk_full)
+
+    def kv_map_t(g_, j):
+        b, i = dec_kv(g_)
+        return (b, i, 0)
+
+    def q_map_t(g_, j):
+        b, _ = dec_kv(g_)
+        return (b, j, 0)
+
+    def row_map_t(g_, j):
+        b, _ = dec_kv(g_)
+        return (b, j)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+                          window=window, q_block=q_block, kv_block=kv_block,
+                          nq=nq, full_len=full_len, decode=dec_kv),
+        grid=(bh * nk_full, nq),
+        in_specs=[smem, smem,
+                  pl.BlockSpec((1, q_block, hd), q_map_t),
+                  pl.BlockSpec((1, kv_block, hd), kv_map_t),
+                  pl.BlockSpec((1, kv_block, hd), kv_map_t),
+                  pl.BlockSpec((1, q_block, hd), q_map_t),
+                  pl.BlockSpec((1, q_block), row_map_t),
+                  pl.BlockSpec((1, q_block), row_map_t)],
+        out_specs=[pl.BlockSpec((1, kv_block, hd), kv_map_t),
+                   pl.BlockSpec((1, kv_block, hd), kv_map_t)],
+        out_shape=[jax.ShapeDtypeStruct((bh, sk, hd), k.dtype),
+                   jax.ShapeDtypeStruct((bh, sk, hd), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((kv_block, hd), jnp.float32),
+                        pltpu.VMEM((kv_block, hd), jnp.float32)],
+        interpret=interpret,
+    )(qoff, kvlen, q, k, v, g, lse, delta)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(causal: bool, window: int, q_block: int, kv_block: int,
+              nk_run: int, full_len: bool, interpret: bool):
+    """custom-VJP flash attention for one static config, jitted so repeated
+    eager calls (tests, benchmarks) reuse the lowered kernel."""
+    cfg = dict(causal=causal, window=window, q_block=q_block,
+               kv_block=kv_block, nk_run=nk_run, full_len=full_len,
+               interpret=interpret)
+
+    @jax.custom_vjp
+    def fa(q, k, v, qoff, kvlen):
+        out, _ = _fwd_call(q, k, v, qoff, kvlen, **cfg)
+        return out
+
+    def fa_fwd(q, k, v, qoff, kvlen):
+        out, lse = _fwd_call(q, k, v, qoff, kvlen, **cfg)
+        return out, (q, k, v, qoff, kvlen, out, lse)
+
+    def fa_bwd(res, g):
+        q, k, v, qoff, kvlen, out, lse = res
+        dq, dk, dv = _bwd_call(q, k, v, qoff, kvlen, out, lse, g, **cfg)
+        return dq, dk, dv, None, None
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    return jax.jit(fa)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_offset: Optional[Union[int, jax.Array]] = None,
+                    kv_len: Optional[Union[int, jax.Array]] = None,
+                    q_block: Optional[int] = None,
+                    kv_block: Optional[int] = None,
+                    interpret: bool = True) -> jax.Array:
+    """q: (bh, sq, hd); k, v: (bh, sk, hd) — heads pre-folded into batch
+    (GQA repeat handled by the caller).  Returns (bh, sq, hd).
+
+    ``q_offset`` places query row i at absolute position ``q_offset + i``
+    (keys at ``0..sk-1``); ``kv_len`` masks keys at positions >= it.  Both
+    accept traced scalars (decode loops never recompile); a static ``kv_len``
+    additionally shrinks the KV grid to ``ceil(kv_len / kv_block)`` blocks.
+    Differentiable w.r.t. q/k/v via the registered recomputation backward.
+    """
+    from repro.kernels import planner
+
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    if q_block is None or kv_block is None:
+        plan = planner.plan_attention(sq, sk, hd, q.dtype)
+        q_block = q_block if q_block is not None else plan["q_block"]
+        kv_block = kv_block if kv_block is not None else plan["kv_block"]
+    # ragged lengths snap each block to the largest divisor of its axis (the
+    # planner's own plans are divisor-exact; this covers explicit overrides)
+    q_block = planner.divisor_tile(sq, min(int(q_block), sq))
+    kv_block = planner.divisor_tile(sk, min(int(kv_block), sk))
+    # a degenerate snap (prime/odd axis -> sub-sublane tile on a long dim)
+    # would run a catastrophically fine grid; take the jnp oracle instead
+    if (q_block < 8 <= sq) or (kv_block < 8 <= sk):
+        from repro.kernels import ref
+
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       q_offset=q_offset, kv_len=kv_len)
+    nk_full = sk // kv_block
+
+    if kv_len is None:
+        static_len: Optional[int] = sk
+    elif isinstance(kv_len, (int, np.integer)) and not isinstance(kv_len, bool):
+        static_len = max(min(int(kv_len), sk), 0)
+    else:
+        static_len = None  # traced: full grid, pl.when skips dead blocks
+
+    if static_len is not None:
+        nk_run = max(-(-static_len // kv_block), 1)
+        kvlen_arr = jnp.full((1,), static_len, jnp.int32)
+    else:
+        nk_run = nk_full
+        kvlen_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    qoff_arr = jnp.asarray(0 if q_offset is None else q_offset,
+                           jnp.int32).reshape(1)
+
+    # static full coverage: every KV block live and no validity mask — the
+    # plain self-attention config compiles to the pre-decode kernel body
+    full_len = static_len is not None and static_len >= sk
+    fa = _flash_fn(bool(causal), int(window), q_block, kv_block, nk_run,
+                   full_len, bool(interpret))
+    return fa(q, k, v, qoff_arr, kvlen_arr)

@@ -208,14 +208,30 @@ def plan_transpose(m: int, n: int, dtype,
     return {"bt": divisor_tile(g, t, dp.lane)}
 
 
+# a query block this short (decode / speculative lookahead) flips the plan
+# into the decode regime: the whole q fits one block and the budget goes to
+# the KV stream
+DECODE_MAX_SQ = 16
+
+
 def plan_attention(sq: int, sk: int, hd: int, dtype,
                    dp: Optional[DeviceParams] = None) -> dict:
     """Flash-attention (q_block, kv_block): solve the working-set quadratic
     4 t^2 (the f32 P tile) + t * hd * (3 itemsize + 4) <= budget for the
-    square block t, then clamp each block to a divisor of its axis."""
+    square block t, then clamp each block to a divisor of its axis.
+
+    Decode regime (sq <= DECODE_MAX_SQ over a longer KV axis — serving a
+    growing cache): the q block is the whole (tiny) query and the envelope
+    is spent on the deepest lane-aligned KV panel that fits — per KV row
+    the resident bytes are the k/v rows plus the f32 P column."""
     dp = dp or device_params()
     itemsize = jnp.dtype(dtype).itemsize
     budget = _budget(dp)
+    if sq <= DECODE_MAX_SQ and sk > sq:
+        per_row = 2 * hd * itemsize + 4 * sq + 4  # k/v rows + P col + l bits
+        kb = _pow2_floor(max(budget // per_row, 1))
+        return {"q_block": sq,
+                "kv_block": divisor_tile(sk, kb, dp.sublane(dtype))}
     c1 = hd * (3 * itemsize + 4) + 8  # q/k/v rows + f32 acc row + (m, l)
     t = int((-c1 + math.sqrt(c1 * c1 + 16.0 * budget)) / 8.0)
     t = _pow2_floor(max(t, 1))

@@ -25,19 +25,27 @@ def fft_ref(x: jax.Array) -> jax.Array:
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                        causal: bool = True, window: int = 0) -> jax.Array:
-    """q, k, v: (bh, s, hd)."""
+                        causal: bool = True, window: int = 0,
+                        q_offset=None, kv_len=None) -> jax.Array:
+    """q, k, v: (bh, s, hd).  ``q_offset`` places query row i at absolute
+    position ``q_offset + i`` (keys at 0..sk-1); ``kv_len`` masks keys at
+    positions >= it.  Rows with every key masked return zeros (matching the
+    kernel's ``l_safe`` guard) rather than a uniform average of v."""
     bh, sq, hd = q.shape
     sk = k.shape[1]
     scale = 1.0 / math.sqrt(hd)
     s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
-    qp = jnp.arange(sq)[:, None]
+    qoff = 0 if q_offset is None else jnp.asarray(q_offset, jnp.int32).reshape(())
+    qp = qoff + jnp.arange(sq)[:, None]
     kp = jnp.arange(sk)[None, :]
     ok = jnp.ones((sq, sk), bool)
+    if kv_len is not None:
+        ok &= kp < jnp.asarray(kv_len, jnp.int32).reshape(())
     if causal:
         ok &= kp <= qp
     if window > 0:
         ok &= kp > qp - window
     s = jnp.where(ok[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(ok.any(axis=-1)[None, :, None], p, 0.0)
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

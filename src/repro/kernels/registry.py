@@ -43,7 +43,11 @@ class KernelSpec:
     ``pallas_only`` names the kwargs (tiles + schedule flags) that must be
     stripped before calling the oracle, which takes semantic kwargs only.
     ``supported() -> bool`` says whether the Pallas path compiles natively
-    on the current backend (it always *runs* via interpret mode)."""
+    on the current backend (it always *runs* via interpret mode).
+    ``has_vjp`` marks ops whose Pallas implementation registers a custom
+    backward (safe under autodiff) — callers that keep a jnp fallback for
+    training (``models.common.attention``) consult it instead of assuming
+    the kernel is inference-only."""
 
     name: str
     pallas: Callable
@@ -51,6 +55,7 @@ class KernelSpec:
     plan: Callable
     pallas_only: Tuple[str, ...] = ()
     supported: Callable[[], bool] = on_tpu
+    has_vjp: bool = False
 
 
 _REGISTRY: dict[str, KernelSpec] = {}
@@ -161,6 +166,9 @@ register(KernelSpec(
     plan=lambda q, k, v: planner.plan_attention(q.shape[1], k.shape[1],
                                                 q.shape[2], q.dtype),
     pallas_only=("q_block", "kv_block"),
+    # recomputation-style backward kernels (dq + dk/dv) registered as a
+    # custom VJP in flash_attention — training no longer routes around it
+    has_vjp=True,
 ))
 
 register(KernelSpec(

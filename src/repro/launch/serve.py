@@ -4,6 +4,12 @@ Serving model: requests arrive with prompts; the server packs up to
 ``max_batch`` requests, prefills them (left-padded to a shared window), and
 decodes in lockstep with per-row stopping.  The KV cache is planned by the
 PWS planner (kv-heads over tp when divisible, else sequence-sharded).
+
+Both jitted steps route attention through ``RunOptions.attention_impl``
+("auto" = the kernel registry's choice): prefill as zero-offset
+self-attention, decode as a cached-attention call where the step position
+flows into the kernel as a traced ``q_offset`` (and, causally, the KV
+valid-length) — per-step positions never retrace either jit.
 """
 from __future__ import annotations
 
@@ -107,12 +113,18 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--attention-impl", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="attention backend for prefill AND decode (the "
+                         "kernel covers both since it learned q_offset/"
+                         "kv_len); 'auto' asks the kernel registry")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.reduced else get_config(args.arch)
     from repro.launch.mesh import make_debug_mesh
     mesh = make_debug_mesh(tp=min(2, len(jax.devices())))
-    server = Server(cfg, mesh, max_batch=args.batch, max_len=128)
+    server = Server(cfg, mesh, max_batch=args.batch, max_len=128,
+                    opts=RunOptions(attention_impl=args.attention_impl))
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(3, cfg.vocab_size, rng.integers(4, 20)).astype(np.int32),
                     max_new=args.max_new) for i in range(args.batch)]

@@ -30,7 +30,9 @@ class RunOptions:
     q_block: Optional[int] = None
     kv_block: Optional[int] = None
     # kernel backend for attention: "auto" consults the kernel registry
-    # (Pallas on TPU, jnp blockwise elsewhere); "jnp" | "pallas" force
+    # (Pallas on TPU, jnp blockwise elsewhere); "jnp" | "pallas" force.
+    # The Pallas kernel carries a custom VJP and decode (q_offset/kv_len)
+    # support, so the knob applies uniformly to train, prefill, and decode
     attention_impl: str = "auto"
     # measured-autotune mode for kernel dispatch: "off" | "replay" | "search";
     # None = resolved by the kernel planner (REPRO_AUTOTUNE, default "replay",

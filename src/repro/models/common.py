@@ -102,21 +102,27 @@ def repeat_kv(k, n_rep: int):
 
 def attention_dense(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=None):
     """Reference attention, materializes (q, k) scores.  Used for short
-    sequences and decode (q_len == 1)."""
+    sequences and decode (q_len == 1).
+
+    GQA keeps k/v at their native head count: q folds its per-group heads
+    into the einsum instead of repeating the (potentially cache-sized) k/v
+    tensors — on every decode step the cache streams through once, ungrown.
+    bf16 operands + f32 accumulation (native MXU semantics): no f32 copy of
+    the cache is ever materialized either."""
     b, sq, h, hd = q.shape
     kvh = k.shape[2]
-    k = repeat_kv(k, h // kvh)
-    v = repeat_kv(v, h // kvh)
+    n_rep = h // kvh
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
-    # bf16 operands + f32 accumulation (native MXU semantics): never
-    # materialize an f32 copy of the (potentially cache-sized) k tensor
-    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+    qg = q.reshape(b, sq, kvh, n_rep, hd)  # head h = kv_head * n_rep + rep
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
                         preferred_element_type=jnp.float32) * scale
-    scores = constrain(scores, "batch", "heads", "*", "*")
-    scores = scores + _mask_bias(q_pos, k_pos, causal=causal, window=window)[None, None]
+    scores = constrain(scores, "batch", "kv_heads", "*", "*", "*")
+    scores = scores + _mask_bias(q_pos, k_pos, causal=causal,
+                                 window=window)[None, None, None]
     probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
+    out = out.reshape(b, sq, h, hd)
     return constrain(out.astype(q.dtype), "batch", "*", "heads", "*")
 
 
@@ -361,9 +367,21 @@ def attention_blockwise_triangular(q, k, v, q_pos, k_pos, *, window=None,
     return constrain(out.astype(q.dtype), "batch", "*", "heads", "*")
 
 
-def _attention_via_kernel(q, k, v, *, causal, window, q_block, kv_block):
+def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
+                          kv_block):
     """Adapter onto the registry's flash-attention Pallas kernel: repeat KV
-    heads (GQA), fold heads into batch, dispatch, unfold."""
+    heads (GQA — a jnp broadcast, so autodiff folds dk/dv back onto the KV
+    heads), fold heads into batch, dispatch, unfold.
+
+    CONTRACT: positions must be contiguous ranges (q row i at
+    ``q_pos[0] + i``, key j at ``k_pos[0] + j``) whenever they matter
+    (causal or windowed masking).  Linear caches and fresh self-attention
+    satisfy this; a *ring-buffer* cache (hybrid's windowed decode) does
+    not — its slot order is a rotation, so such callers must stay on the
+    jnp paths (they pass ``impl="jnp"`` explicitly).  For decode
+    (sq != sk) the kernel gets the query offset, and under causal masking
+    a ``kv_len`` so KV blocks past the attended prefix are skipped
+    instead of computed-then-masked."""
     from repro.kernels import registry
 
     b, sq, h, hd = q.shape
@@ -375,12 +393,19 @@ def _attention_via_kernel(q, k, v, *, causal, window, q_block, kv_block):
     def fold(x):
         return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
 
+    if sq == sk:
+        q_offset = kv_len = None  # zero-offset self-attention: static path
+    else:
+        q_offset = (q_pos[0] - k_pos[0]).astype(jnp.int32)
+        kv_len = jnp.minimum(q_offset + sq, sk) if causal else None
+
     # forward overrides only when divisor-exact; else the per-shape plan wins
     qb = q_block if (q_block and sq % min(q_block, sq) == 0) else None
     kb = kv_block if (kv_block and sk % min(kv_block, sk) == 0) else None
     out = registry.dispatch(
         "attention", fold(q), fold(k), fold(v), causal=causal,
-        window=0 if window is None else int(window), prefer_ref=False,
+        window=0 if window is None else int(window),
+        q_offset=q_offset, kv_len=kv_len, prefer_ref=False,
         q_block=qb, kv_block=kb,
     )
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
@@ -394,25 +419,37 @@ def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=
     triangular for causal long self-attention when block-skip is enabled.
 
     ``impl`` picks the kernel backend: "jnp" (the default) keeps the
-    XLA paths, whose blockwise variant carries the flash custom VJP — safe
-    under autodiff.  "auto" asks the registry (Pallas on TPU for the
-    self-attention shapes the kernel covers): the Pallas kernel has no VJP
-    yet (ROADMAP), so callers pass "auto"/"pallas" only on paths that are
-    never differentiated (prefill/decode — the model layer gates this)."""
+    XLA paths, whose blockwise variant carries the flash custom VJP.
+    "auto" asks the registry (Pallas on TPU): the Pallas kernel now covers
+    cached decode (query offset + KV valid-length) and registers its own
+    recomputation backward, so both training and the serving prefill/decode
+    loop may route through it.  The kernel route assumes contiguous
+    position ranges (every model path satisfies this); cross-attention with
+    meaningless positions is fine too since it is non-causal/unwindowed."""
     sq, sk = q.shape[1], k.shape[1]
     if impl == "auto":
         from repro.kernels import registry
 
         impl = "pallas" if registry.default_impl("attention") == "pallas" else "jnp"
-    # the Pallas kernel covers zero-offset self-attention with the default
-    # scale; everything else (decode over a cache, cross-attn, custom scale)
-    # stays on the jnp paths below
-    # the kernel's window/causal are static kwargs: a traced per-layer window
-    # (scan-carried heterogeneity) must stay on the jnp paths
-    if (impl == "pallas" and sq == sk and sq > 1 and softmax_scale is None
+    if impl == "pallas":
+        from repro.kernels import registry
+
+        # an attention kernel without a registered backward may not serve
+        # this route: callers differentiate through it (training), and the
+        # model layer cannot tell a forward-only call from a traced-for-grad
+        # one — fall back to the jnp paths, whose blockwise variant carries
+        # the flash custom VJP
+        if not registry.get("attention").has_vjp:
+            impl = "jnp"
+    # custom softmax scales stay on the jnp paths (the kernel hard-codes
+    # 1/sqrt(hd)), as does banded-local; a traced per-layer window
+    # (scan-carried heterogeneity) must too — the kernel's window/causal are
+    # static kwargs
+    if (impl == "pallas" and softmax_scale is None
             and not use_banded_local and isinstance(window, (int, type(None)))):
-        return _attention_via_kernel(q, k, v, causal=causal, window=window,
-                                     q_block=q_block, kv_block=kv_block)
+        return _attention_via_kernel(q, k, v, q_pos, k_pos, causal=causal,
+                                     window=window, q_block=q_block,
+                                     kv_block=kv_block)
     if window is not None and use_banded_local and sq == sk and sq > 2 * max(window, 128):
         return attention_banded_local(q, k, v, q_pos, k_pos, window=window,
                                       softmax_scale=softmax_scale)

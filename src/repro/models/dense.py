@@ -135,9 +135,10 @@ class DenseLM(Model):
             q_block=self.opts.q_block, kv_block=self.opts.kv_block,
             # active whenever we attend over fresh k/v (train AND prefill)
             causal_block_skip=self.opts.causal_block_skip and s > 1,
-            # the Pallas kernel has no VJP: only inference calls (prefill /
-            # decode attend over a cache) may leave the jnp flash-VJP path
-            impl=self.opts.attention_impl if k_cache is not None else "jnp",
+            # the Pallas kernel registers a recomputation backward and covers
+            # cached decode (q_offset/kv_len), so training and serving share
+            # one impl knob — no more routing around the kernel under autodiff
+            impl=self.opts.attention_impl,
         )
         o = jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"])
         return x + common.constrain(o, "batch", "seq", "*"), (k_cache, v_cache)

@@ -182,8 +182,12 @@ class HybridLM(Model):
                 k_att, v_att, kp = kc, vc, k_pos
         else:
             k_att, v_att, kp = k, v, k_pos
+        # impl stays "jnp": the ring-buffer cache's k_pos is non-monotonic
+        # (slot j holds position (write_at + j) mod W), which violates the
+        # Pallas kernel route's contiguous-positions contract — the kernel
+        # would causally mask the rolled-over half of the window
         o = common.attention(q, k_att, v_att, q_pos, kp, causal=True,
-                             window=cfg.sliding_window,
+                             window=cfg.sliding_window, impl="jnp",
                              use_banded_local=self.opts.use_banded_local and kc is None,
                              block_threshold=max(self.opts.q_block, self.opts.kv_block))
         x = x + common.constrain(

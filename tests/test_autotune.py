@@ -107,6 +107,34 @@ def test_shape_class_buckets_to_pow2():
     assert autotune.entry_key("transpose", a).startswith("transpose|512x512|")
 
 
+def test_entry_key_carries_semantic_flags():
+    """Causal vs windowed vs decode attention must not share one table entry
+    (same shape class, different measured optimum)."""
+    q = jax.ShapeDtypeStruct((4, 512, 64), jnp.float32)
+    kv = jax.ShapeDtypeStruct((4, 512, 64), jnp.float32)
+    k_causal = autotune.entry_key("attention", q, kv, kv,
+                                  kwargs={"causal": True, "window": 0})
+    k_plain = autotune.entry_key("attention", q, kv, kv,
+                                 kwargs={"causal": False, "window": 0})
+    k_win = autotune.entry_key("attention", q, kv, kv,
+                               kwargs={"causal": True, "window": 128})
+    assert len({k_causal, k_plain, k_win}) == 3
+    assert "causal=True" in k_causal and "window=128" in k_win
+    # decode (sq != sk) is a derived flag: same kwargs, different key
+    qd = jax.ShapeDtypeStruct((4, 1, 64), jnp.float32)
+    k_dec = autotune.entry_key("attention", qd, kv, kv,
+                               kwargs={"causal": True, "window": 0})
+    assert "decode=True" in k_dec and "decode=False" in k_causal
+    # omitted kwargs normalize to the kernel defaults: one key per config
+    # regardless of calling convention
+    assert autotune.entry_key("attention", q, kv, kv) == k_causal
+    assert autotune.entry_key("attention", q, kv, kv,
+                              kwargs={"causal": None}) == k_causal
+    # flag-less ops keep the bare three-field key (no format churn)
+    x = jax.ShapeDtypeStruct((4, 256), jnp.float32)
+    assert autotune.entry_key("scan", x) == "scan|4x256|float32"
+
+
 def test_snap_plan_restores_divisibility_across_class():
     # a plan recorded for n=512 replays on the same-class n=384 input
     x384 = jax.ShapeDtypeStruct((4, 384), jnp.float32)
@@ -128,7 +156,9 @@ def test_search_persists_and_roundtrips(tune_dir):
     plan = autotune.lookup("scan", x)
     assert plan == entry["plan"]
     raw = json.loads(path.read_text())
-    assert raw["version"] == 1 and len(raw["entries"]) == 1
+    assert raw["version"] == autotune._TABLE_VERSION
+    assert raw["jax_version"] == jax.__version__  # stamped on write
+    assert len(raw["entries"]) == 1
 
 
 def test_replay_cold_cache_is_noop(tune_dir):
@@ -146,6 +176,7 @@ def test_replay_cold_cache_is_noop(tune_dir):
     "not json at all {{{",
     '{"version": 99, "entries": {}}',
     '[1, 2, 3]',
+    # pre-flag key format (table version 1): ignored wholesale, not migrated
     '{"version": 1, "entries": {"scan|4x256|float32": {"plan": {"block": "x"}}}}',
 ])
 def test_corrupt_or_foreign_tables_are_ignored(tune_dir, payload):
@@ -161,6 +192,22 @@ def test_corrupt_or_foreign_tables_are_ignored(tune_dir, payload):
         np.asarray(got),
         np.asarray(registry.dispatch("scan", x, prefer_ref=True)),
         rtol=1e-4, atol=1e-4)
+
+
+def test_stale_jax_stamp_is_cold_cache(tune_dir):
+    """A table tuned under another jaxlib replays nothing: tuned timings do
+    not survive toolchain upgrades, so the stamp mismatch means cold."""
+    x = jax.random.normal(jax.random.key(0), (2, 256))
+    table = autotune.load_table()
+    table[autotune.entry_key("scan", x)] = {"plan": {"block": 64}, "us": 1.0}
+    path = autotune.save_table()
+    raw = json.loads(path.read_text())
+    raw["jax_version"] = "0.0.0-somebody-else"
+    path.write_text(json.dumps(raw))
+    autotune.clear_cache()
+    assert autotune.load_table() == {}
+    with autotune.mode_scope("replay"):
+        assert autotune.overlay("scan", (x,)) == {}  # degrades, never replays
 
 
 def test_dispatch_replays_tuned_plan(tune_dir):

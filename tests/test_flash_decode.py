@@ -1,0 +1,256 @@
+"""Decode-path + backward flash attention.
+
+Covers the two attention ROADMAP items landed together: cached decode on the
+Pallas kernel (``q_offset`` / ``kv_len``, static grid shrink and traced
+no-recompile paths, ragged shapes, fully-masked rows) and the custom VJP
+(recomputation backward kernels), plus the model-layer routing — with the
+registry forced to "pallas", ``models.common.attention(..., impl="auto")``
+reaches the kernel in interpret mode for decode *and* under autodiff, with
+value and gradient parity against the jnp paths.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref, registry
+from repro.kernels.flash_attention import flash_attention
+from repro.models import common
+
+ATOL = 1e-5
+
+
+def _qkv(bh, sq, sk, hd, seed=0):
+    keys = jax.random.split(jax.random.key(seed), 3)
+    return (jax.random.normal(keys[0], (bh, sq, hd)),
+            jax.random.normal(keys[1], (bh, sk, hd)),
+            jax.random.normal(keys[2], (bh, sk, hd)))
+
+
+# -- decode forward -----------------------------------------------------------
+
+@pytest.mark.parametrize("pos", [0, 63, 200, 255])
+def test_decode_parity_static_kv_len(pos):
+    """sq=1 over a 256-slot cache: static kv_len shrinks the KV grid, output
+    matches the oracle at decode positions across the cache."""
+    q, k, v = _qkv(2, 1, 256, 64, seed=pos)
+    out = flash_attention(q, k, v, causal=True, q_offset=pos, kv_len=pos + 1,
+                          q_block=1, kv_block=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=pos,
+                                   kv_len=pos + 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=ATOL)
+
+
+def test_decode_traced_offset_no_recompile():
+    """The serving loop's shape: one jitted function, the step position a
+    traced scalar — every position runs through the same compilation."""
+    q, k, v = _qkv(2, 1, 256, 64)
+
+    calls = []
+
+    @jax.jit
+    def step(pos):
+        calls.append(1)  # traced once, replayed for every pos
+        return flash_attention(q, k, v, causal=True, q_offset=pos,
+                               kv_len=pos + 1, q_block=1, kv_block=64)
+
+    for pos in (0, 17, 255):
+        out = step(jnp.int32(pos))
+        want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=pos,
+                                       kv_len=pos + 1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=ATOL)
+    assert len(calls) == 1
+
+
+def test_chunked_prefill_offset():
+    """A prefill chunk (sq > 1) at a nonzero offset into the cache."""
+    q, k, v = _qkv(2, 64, 256, 32)
+    out = flash_attention(q, k, v, causal=True, q_offset=64, kv_len=128,
+                          q_block=32, kv_block=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=64,
+                                   kv_len=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=ATOL)
+
+
+@pytest.mark.parametrize("sq,sk,qb,kb", [
+    (96, 96, 64, 64),    # blocks snap to 32/32
+    (60, 60, 64, 64),    # snap to the dim itself
+    (2, 254, 64, 64),    # 127*2: degenerate snap -> jnp-oracle fallback
+    (2, 127, 64, 64),    # prime: degenerate snap -> jnp-oracle fallback
+])
+def test_ragged_shapes_snap_instead_of_crash(sq, sk, qb, kb):
+    """Non-divisor blocks snap to divisors; a degenerate snap (sub-sublane
+    tile on a long axis) falls back to the oracle (the old assert crashed)."""
+    q, k, v = _qkv(2, sq, sk, 32)
+    out = flash_attention(q, k, v, causal=sq == sk, q_block=qb, kv_block=kb)
+    want = ref.flash_attention_ref(q, k, v, causal=sq == sk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=ATOL)
+
+
+def test_fully_masked_rows_are_zero_and_match_ref():
+    """window > 0 with the query offset beyond every valid key: every score
+    is masked, the l_safe guard emits zeros, and the oracle agrees (instead
+    of silently averaging v through a uniform softmax)."""
+    q, k, v = _qkv(2, 4, 64, 32)
+    out = flash_attention(q, k, v, causal=False, window=16, q_offset=500,
+                          kv_len=64, q_block=4, kv_block=32)
+    want = ref.flash_attention_ref(q, k, v, causal=False, window=16,
+                                   q_offset=500, kv_len=64)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros_like(out))
+    np.testing.assert_array_equal(np.asarray(want), np.zeros_like(want))
+
+
+# -- the custom VJP -----------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 40), (False, 0)])
+def test_vjp_grads_match_ref(causal, window):
+    q, k, v = _qkv(2, 128, 128, 32)
+
+    def loss_kernel(q, k, v):
+        o = flash_attention(q, k, v, causal=causal, window=window,
+                            q_block=32, kv_block=32)
+        return jnp.sum(o * o)
+
+    def loss_ref(q, k, v):
+        o = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+        return jnp.sum(o * o)
+
+    got = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for g, w, name in zip(got, want, "qkv"):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-4,
+                                   err_msg=f"d{name}")
+
+
+def test_vjp_grads_with_offsets():
+    """The backward kernels honor q_offset/kv_len: grads of a chunked
+    (offset) forward match grads of the oracle with the same mask, and
+    masked-out cache slots get exactly zero dk/dv."""
+    q, k, v = _qkv(2, 32, 128, 32)
+
+    def loss_kernel(q, k, v):
+        o = flash_attention(q, k, v, causal=True, q_offset=32, kv_len=64,
+                            q_block=32, kv_block=32)
+        return jnp.sum(o * o)
+
+    def loss_ref(q, k, v):
+        o = ref.flash_attention_ref(q, k, v, causal=True, q_offset=32,
+                                    kv_len=64)
+        return jnp.sum(o * o)
+
+    got = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for g, w, name in zip(got, want, "qkv"):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-4,
+                                   err_msg=f"d{name}")
+    assert float(jnp.abs(got[1][:, 64:]).max()) == 0.0  # dead slots: dk == 0
+    assert float(jnp.abs(got[2][:, 64:]).max()) == 0.0
+
+
+def test_registry_attention_has_backward_entry():
+    spec = registry.get("attention")
+    assert spec.has_vjp
+    assert not registry.get("matmul").has_vjp
+
+
+# -- model-layer routing ------------------------------------------------------
+
+@pytest.fixture
+def force_pallas(monkeypatch):
+    """Force 'auto' to resolve to the Pallas path (as on TPU) while keeping
+    supported()=False, so dispatch runs the kernel in interpret mode; wrap
+    the spec's pallas hook to count that the kernel really ran."""
+    calls = []
+    spec = registry.get("attention")
+
+    def counting_pallas(*args, **kwargs):
+        calls.append(kwargs.keys())
+        return spec.pallas(*args, **kwargs)
+
+    monkeypatch.setitem(registry._REGISTRY, "attention",
+                        dataclasses.replace(spec, pallas=counting_pallas))
+    monkeypatch.setattr(registry, "default_impl",
+                        lambda name: "pallas" if name == "attention"
+                        else "ref")
+    return calls
+
+
+def _model_qkv(b, sq, sk, h, kvh, hd, seed=0):
+    keys = jax.random.split(jax.random.key(seed), 3)
+    return (jax.random.normal(keys[0], (b, sq, h, hd)),
+            jax.random.normal(keys[1], (b, sk, kvh, hd)),
+            jax.random.normal(keys[2], (b, sk, kvh, hd)))
+
+
+def test_attention_auto_routes_decode_through_kernel(force_pallas):
+    """impl='auto': a decode call (sq=1 over a 256-slot cache, GQA heads)
+    runs the registry's Pallas kernel in interpret mode and matches the jnp
+    (dense) decode path."""
+    q, k, v = _model_qkv(2, 1, 256, 4, 2, 32)
+    pos = jnp.full((1,), 100, jnp.int32)
+    kp = jnp.arange(256, dtype=jnp.int32)
+    got = common.attention(q, k, v, pos, kp, causal=True, impl="auto",
+                           q_block=64, kv_block=64)
+    assert force_pallas, "decode did not reach the Pallas kernel"
+    want = common.attention(q, k, v, pos, kp, causal=True, impl="jnp",
+                            q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_attention_auto_routes_autodiff_through_kernel(force_pallas):
+    """impl='auto' under jax.grad: the kernel's custom VJP serves the
+    backward (no routing around it), with gradient parity against the jnp
+    path's flash VJP."""
+    q, k, v = _model_qkv(2, 128, 128, 4, 2, 32)
+    pos = jnp.arange(128, dtype=jnp.int32)
+
+    def loss(q, k, v, impl):
+        o = common.attention(q, k, v, pos, pos, causal=True, impl=impl,
+                             q_block=64, kv_block=64)
+        return jnp.sum(o * o)
+
+    got_val = loss(q, k, v, "auto")
+    got = jax.grad(loss, argnums=(0, 1, 2))(q, k, v, "auto")
+    assert force_pallas, "autodiff call did not reach the Pallas kernel"
+    want_val = loss(q, k, v, "jnp")
+    want = jax.grad(loss, argnums=(0, 1, 2))(q, k, v, "jnp")
+    np.testing.assert_allclose(float(got_val), float(want_val), rtol=1e-5)
+    for g, w, name in zip(got, want, "qkv"):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-4,
+                                   err_msg=f"d{name}")
+
+
+def test_attention_dense_gqa_decode_numerics_unchanged():
+    """The no-repeat GQA einsum in attention_dense matches the old
+    materializing formula (f32 scores, repeated cache) on a decode step."""
+    q, k, v = _model_qkv(2, 1, 128, 8, 2, 32, seed=3)
+    pos = jnp.full((1,), 90, jnp.int32)
+    kp = jnp.arange(128, dtype=jnp.int32)
+    got = common.attention_dense(q, k, v, pos, kp, causal=True)
+
+    kr = common.repeat_kv(k, 4)
+    vr = common.repeat_kv(v, 4)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                        preferred_element_type=jnp.float32) / np.sqrt(32)
+    scores = scores + common._mask_bias(pos, kp, causal=True,
+                                        window=None)[None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    want = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vr.dtype), vr,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_planner_decode_regime():
+    """plan_attention flips into the decode regime for tiny sq over a long
+    KV axis: the whole query is one block and the KV panel deepens."""
+    from repro.kernels import planner
+
+    dp = planner.DeviceParams("cpu", "test", 8 * 2**20, 64)
+    plan = planner.plan_attention(1, 4096, 64, jnp.float32, dp)
+    assert plan["q_block"] == 1
+    assert 4096 % plan["kv_block"] == 0
+    square = planner.plan_attention(4096, 4096, 64, jnp.float32, dp)
+    assert plan["kv_block"] >= square["kv_block"]  # budget shifts to KV

@@ -48,7 +48,11 @@ def _sweep() -> dict[str, list[tuple]]:
         "scan": [((n(0, (8, 8192)),), {}),
                  ((n(1, (8, 4096)),), {})],
         "matmul": [((n(2, (512, 512)), n(3, (512, 512))), {}),
-                   ((n(4, (256, 256)), n(5, (256, 256))), {})],
+                   ((n(4, (256, 256)), n(5, (256, 256))), {}),
+                   # above the modeled Strassen crossover: the search covers
+                   # backend/cutoff/morton variants alongside the tile ladder
+                   # (bench_kernels' matmul_strassen shape)
+                   ((n(19, (1024, 1024)), n(20, (1024, 1024))), {})],
         "transpose": [((n(6, (512, 512)),), {}),
                       ((n(7, (256, 256)),), {})],
         "attention": [((n(8, (8, 512, 64)), n(9, (8, 512, 64)),

@@ -11,14 +11,27 @@ For every registered op this times:
                          table (``benchmarks/autotune.py`` populates it;
                          falls back to the analytic plan on a cold cache).
 
+The ``matmul_strassen`` case additionally records ``pallas_classical_us``
+(planner tiles, backend forced classical) next to ``pallas_planned_us``
+(which routes the planner's Strassen choice at that shape), so the
+crossover claim — Strassen beats classical above the modeled edge — is
+measured, not asserted.  The ``mlp`` case times the model-level
+``gated_mlp`` with ``impl="jnp"`` vs ``impl="pallas"`` (the registry route
+model traffic takes).
+
 Interpret-mode wall times are NOT meaningful device performance; they are
 recorded so the before/after planner tiling delta is machine-checkable.  On
 the TPU target the same dispatch compiles natively.  Emits
 ``name,us_per_call,derived`` CSV rows and (via ``main(json_path=...)``) a
 machine-readable ``BENCH_kernels.json``.
+
+``--ops`` filters cases by name or registry op (e.g. ``--ops matmul`` runs
+the matmul + matmul_strassen arms only — the CI smoke arm); a filtered run
+skips the JSON write unless ``--json`` is given explicitly.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 from pathlib import Path
@@ -36,6 +49,9 @@ from repro.kernels import autotune, planner, registry  # noqa: E402
 LEGACY_TILES = {
     "scan": {"block": 512},
     "matmul": {"bm": 128, "bn": 128, "bk": 128},
+    # pre-substrate "before": fixed tiles AND no Strassen schedule
+    "matmul_strassen": {"bm": 128, "bn": 128, "bk": 128,
+                        "backend": "classical"},
     "transpose": {"bt": 128},
     "attention": {"q_block": 256, "kv_block": 256},
     "attention_decode": {"q_block": 256, "kv_block": 256},
@@ -67,11 +83,20 @@ def _cases():
     kv_len = 1000
     xc = (jax.random.normal(key(6), (4, 1024))
           + 1j * jax.random.normal(key(7), (4, 1024))).astype(jnp.complex64)
+    # the largest benched square shape: above the modeled crossover, so the
+    # planner routes the Strassen backend; the classical extra arm measures
+    # the same shape with the backend forced back
+    a2 = jax.random.normal(key(11), (1024, 1024), jnp.float32)
+    b2 = jax.random.normal(key(12), (1024, 1024), jnp.float32)
     return {
         "scan": dict(op="scan", args=(x,), kwargs={}, label="8x8192",
                      derived=lambda us: f"{x.size * 4 * 2 / (us / 1e6) / 1e9:.2f}GB/s"),
         "matmul": dict(op="matmul", args=(a, b), kwargs={}, label="512",
                        derived=lambda us: f"{2 * 512**3 / (us / 1e6) / 1e9:.1f}GFLOP/s"),
+        "matmul_strassen": dict(
+            op="matmul", args=(a2, b2), kwargs={}, label="1024",
+            extra_arms={"pallas_classical": {"backend": "classical"}},
+            derived=lambda us: f"{2 * 1024**3 / (us / 1e6) / 1e9:.1f}GFLOP/s"),
         "transpose": dict(op="transpose", args=(a,), kwargs={}, label="512",
                           derived=lambda us: f"{a.size * 4 * 2 / (us / 1e6) / 1e9:.2f}GB/s"),
         "attention": dict(op="attention", args=(q, k, v),
@@ -89,9 +114,35 @@ def _cases():
     }
 
 
-def main(json_path: str | None = None) -> dict:
+def _bench_mlp() -> dict:
+    """Model-level arm: ``gated_mlp`` with the jnp einsum path vs the kernel
+    registry route (``impl="pallas"``) — what serve/train traffic sees once
+    model matmuls dispatch through the substrate."""
+    from repro.models import common as model_common
+
+    key = jax.random.key
+    x = jax.random.normal(key(20), (512, 256), jnp.float32)
+    wg = jax.random.normal(key(21), (256, 1024), jnp.float32) * 0.05
+    wu = jax.random.normal(key(22), (256, 1024), jnp.float32) * 0.05
+    wd = jax.random.normal(key(23), (1024, 256), jnp.float32) * 0.05
+    flops = 3 * 2 * 512 * 256 * 1024
+    entry: dict = {"op": "mlp", "shape": "512x256x1024"}
+    with autotune.mode_scope("off"):
+        for arm, impl in (("jnp", "jnp"), ("pallas_planned", "pallas")):
+            fn = jax.jit(lambda *a, _i=impl: model_common.gated_mlp(*a, impl=_i))
+            us = timeit(fn, x, wg, wu, wd)
+            entry[f"{arm}_us"] = round(us, 1)
+            print(f"kernel_mlp_{arm}_512x256x1024,{us:.0f},"
+                  f"{flops / (us / 1e6) / 1e9:.1f}GFLOP/s")
+    return entry
+
+
+def main(json_path: str | None = None, ops: list[str] | None = None) -> dict:
     results: dict[str, dict] = {}
-    for name, case in _cases().items():
+    cases = _cases()
+    if ops:
+        cases = {n: c for n, c in cases.items() if n in ops or c["op"] in ops}
+    for name, case in cases.items():
         op, args, kwargs = case["op"], case["args"], case["kwargs"]
         plan = dict(registry.get(op).plan(*args))
         entry: dict = {"op": op, "shape": case["label"], "planned_tiles": plan}
@@ -104,9 +155,10 @@ def main(json_path: str | None = None) -> dict:
 
         # fixed/planned arms pin the mode off: an inherited REPRO_AUTOTUNE +
         # warm table must not overlay tuned tiles onto the comparison baseline
+        arms = [("pallas_fixed", LEGACY_TILES[name]), ("pallas_planned", {})]
+        arms += list(case.get("extra_arms", {}).items())
         with autotune.mode_scope("off"):
-            for arm, tiles in (("pallas_fixed", LEGACY_TILES[name]),
-                               ("pallas_planned", {})):
+            for arm, tiles in arms:
                 fn = jax.jit(lambda *a, _n=op, _kw=kwargs, _t=tiles: registry.dispatch(
                     _n, *a, prefer_ref=False, **_kw, **_t))
                 us = timeit(fn, *args, iters=5)
@@ -116,7 +168,11 @@ def main(json_path: str | None = None) -> dict:
         # tuned arm: same dispatch, persisted measurements replayed on top of
         # the plan (identical to pallas_planned when the table has no entry);
         # the lookup keys the semantic kwargs (masking regime / decode flag)
+        # and mirrors replay's cross-shape interpolation fallback, so the
+        # recorded tiles are the ones the timed dispatch actually ran
         tuned = autotune.lookup(op, *args, kwargs=kwargs)
+        if tuned is None:
+            tuned = autotune.nearest_plan(op, *args, kwargs=kwargs)
         entry["tuned_tiles"] = autotune.snap_plan(op, args, tuned) if tuned else plan
         with autotune.mode_scope("replay"):
             fn = jax.jit(lambda *a, _n=op, _kw=kwargs: registry.dispatch(
@@ -125,6 +181,9 @@ def main(json_path: str | None = None) -> dict:
         entry["pallas_tuned_us"] = round(us, 1)
         print(f"kernel_{name}_pallas_tuned_{case['label']},{us:.0f},interpret")
         results[name] = entry
+
+    if ops is None or "mlp" in ops:
+        results["mlp"] = _bench_mlp()
 
     dp = planner.device_params()
     payload = {
@@ -139,4 +198,14 @@ def main(json_path: str | None = None) -> dict:
 
 
 if __name__ == "__main__":
-    main(json_path=str(REPO / "BENCH_kernels.json"))
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ops", default="",
+                    help="comma-separated case/op filter (e.g. 'matmul' runs "
+                         "the matmul + matmul_strassen smoke arms)")
+    ap.add_argument("--json", default=None,
+                    help="output path (default: BENCH_kernels.json for a "
+                         "full run; filtered runs print only)")
+    cli = ap.parse_args()
+    wanted = [o for o in cli.ops.split(",") if o] or None
+    path = cli.json or (None if wanted else str(REPO / "BENCH_kernels.json"))
+    main(json_path=path, ops=wanted)

@@ -46,6 +46,28 @@ def seq_cache_complexity_strassen(n: int, M: int, B: int) -> float:
     return n ** lam / (B * M ** (lam / 2 - 1))
 
 
+def strassen_crossover_edge(M: int, B: int, *, min_edge: int = 128,
+                            max_edge: int = 1 << 20) -> int:
+    """Largest power-of-two square edge at which the classical Depth-n-MM
+    envelope still wins against the Strassen one — i.e. the recursion cutoff
+    for a Strassen-schedule matmul, and the edge *above* which the planner
+    should pick the Strassen backend.
+
+    Both envelopes get the same O(n^2/B) read/write term so the comparison
+    is total modeled traffic; the leading terms then cross at n ~ sqrt(M)
+    (below it the whole problem fits fast memory and classical is one pass).
+    """
+    edge = min_edge
+    while edge < max_edge:
+        n = 2 * edge
+        lin = 3.0 * n * n / B
+        if (seq_cache_complexity_strassen(n, M, B) + lin
+                < seq_cache_complexity_mm(n, n, n, M, B)):
+            break
+        edge *= 2
+    return edge
+
+
 def seq_cache_complexity_fft(n: int, M: int, B: int) -> float:
     """Q = (n/B) log_M n."""
     return (n / B) * (math.log(n) / math.log(max(M, 2)))

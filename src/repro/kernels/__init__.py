@@ -42,6 +42,26 @@ points, each in exactly one module:
     row-major fallback.  Used by ``hbp_matmul``, ``bi_transpose``, and
     ``flash_attention``; cross-validated against ``repro.core.layouts``.
 
+Backend selection
+-----------------
+``matmul`` is a multi-backend op: ``planner.plan_matmul`` carries a
+``backend`` field chosen by comparing the costmodel envelopes
+(``seq_cache_complexity_strassen`` vs the classical Q) at the queried
+device params — "strassen" (the paper's Type-2 Depth-n-MM exemplar,
+W = n^2.807) for square, pow2-friendly, fp32/bf16 shapes above the modeled
+crossover edge (~sqrt M), "classical" otherwise — plus the recursion
+``cutoff`` beneath which ``strassen_matmul``'s 7-product quadrant schedule
+leaves dispatch to the Morton-ordered ``hbp_matmul`` tile kernel with f32
+accumulation preserved through the combination tree.  The registry's
+``matmul`` entry (``strassen_matmul.matmul``) resolves the variant at
+dispatch and registers a custom VJP (dA = g Bᵀ, dB = Aᵀ g, each
+re-planned for its own shape), so model matmuls (``models.common``'s
+``gated_mlp`` / ``logits_matmul`` behind ``RunOptions.matmul_impl``) route
+through the kernels under training and serving alike.  Autotune v3 keys
+carry the planner-selected backend and its search covers backend, cutoff,
+and the ``morton`` schedule flag alongside the tile ladder, so the
+*measured* crossover can overrule the modeled one per device.
+
 Tuning
 ------
 ``autotune`` closes the measure→persist→replay loop over the planner: the
@@ -70,9 +90,9 @@ selects among three modes:
 next to the fixed/planned arms.  Kernel signatures stay oblivious: tuning
 never adds a knob to a kernel, it only picks values for the existing ones.
 
-Kernel modules (``bp_scan``, ``hbp_matmul``, ``bi_transpose``,
-``flash_attention``, ``bi_fft``) stay importable directly for tests and
-experiments; ``ref`` holds the pure-jnp oracles.
+Kernel modules (``bp_scan``, ``hbp_matmul``, ``strassen_matmul``,
+``bi_transpose``, ``flash_attention``, ``bi_fft``) stay importable directly
+for tests and experiments; ``ref`` holds the pure-jnp oracles.
 """
 from repro.kernels import autotune, morton, planner, ref, registry
 from repro.kernels.bi_fft import bi_fft
@@ -81,6 +101,7 @@ from repro.kernels.bp_scan import bp_scan
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hbp_matmul import hbp_matmul
 from repro.kernels.registry import dispatch
+from repro.kernels.strassen_matmul import strassen_matmul
 
 __all__ = [
     "autotune",
@@ -94,4 +115,5 @@ __all__ = [
     "bi_fft",
     "flash_attention",
     "hbp_matmul",
+    "strassen_matmul",
 ]

@@ -40,11 +40,20 @@ Tables are JSON files under ``REPRO_TUNE_DIR`` (default
 unknown-format files are ignored, never fatal.
 
 Table keys carry the op's *semantic* flags alongside the shape class
-(``attention`` keys causal, window, and a decode marker — sq != sk), so
-masking regimes and cached-decode shapes no longer share one measured
-optimum.  Tables are also stamped with ``jax.__version__`` on write;
-a table written by a different jaxlib/toolchain (or the pre-flag key
-format, table version 1) is treated as a cold cache rather than replayed.
+(``attention`` keys causal, window, and a decode marker — sq != sk;
+``matmul`` keys the planner-selected backend), so masking regimes,
+cached-decode shapes, and Strassen-vs-classical matmuls never share one
+measured optimum.  Tables are also stamped with ``jax.__version__`` on
+write; a table written by a different jaxlib/toolchain (or an older key
+format — table versions 1 and 2) is treated as a cold cache.
+
+Beyond tile sizes, v3 entries may tune *variant* knobs: the matmul backend
+("classical" | "strassen") and its recursion ``cutoff`` (the measured
+crossover can overrule the modeled one in either direction), and the
+``morton`` grid-schedule flag on matmul/transpose.  On an exact-key miss,
+``overlay`` interpolates: it borrows the nearest recorded shape_class for
+the same ``(device_kind, op, dtype, flags)`` (snapped back to the actual
+shape's divisibility) instead of going cold, logging once per borrowed key.
 """
 from __future__ import annotations
 
@@ -70,8 +79,10 @@ log = logging.getLogger("repro.autotune")
 
 MODES = ("off", "replay", "search")
 _DEFAULT_DIR = "~/.cache/repro/autotune"
-# v2: semantic flags joined the key format; v1 tables are ignored (cold)
-_TABLE_VERSION = 2
+# v2: semantic flags joined the key format; v3: matmul keys its derived
+# backend flag and plans may carry variant knobs (backend/cutoff/morton).
+# Older tables are ignored (cold)
+_TABLE_VERSION = 3
 
 _mode_override: Optional[str] = None
 # (tune_dir, device_kind) -> entries dict; cleared by clear_cache()
@@ -159,7 +170,9 @@ def shape_class(*args) -> str:
 def sem_class(op: str, args, kwargs: Optional[dict] = None) -> str:
     """Semantic-flag suffix of the table key: the op's masking/regime kwargs
     (static Python scalars only — traced values key as ``?``), plus derived
-    shape-regime markers (attention: ``decode`` when sq != sk)."""
+    shape-regime markers (attention: ``decode`` when sq != sk; matmul: the
+    planner-selected ``backend``, so Strassen and classical shapes never
+    share a measured optimum)."""
     kwargs = kwargs or {}
     parts = []
     for flag, default in _SEM_FLAGS.get(op, {}).items():
@@ -172,6 +185,13 @@ def sem_class(op: str, args, kwargs: Optional[dict] = None) -> str:
             parts.append(f"{flag}=?")
     if op == "attention":
         parts.append(f"decode={args[0].shape[1] != args[1].shape[1]}")
+    if op == "matmul":
+        backend = kwargs.get("backend")
+        if backend is None:
+            backend = planner.plan_matmul(
+                args[0].shape[0], args[0].shape[1], args[1].shape[1],
+                args[0].dtype).get("backend", "classical")
+        parts.append(f"backend={backend}")
     return ",".join(parts)
 
 
@@ -196,11 +216,20 @@ def table_path(kind: Optional[str] = None) -> Path:
     return tune_dir() / f"{safe}.json"
 
 
+def _valid_plan_value(v) -> bool:
+    # tiles are positive ints; variant knobs are the morton bool and the
+    # matmul backend string
+    if isinstance(v, bool):
+        return True
+    if isinstance(v, int):
+        return v > 0
+    return isinstance(v, str) and v in ("classical", "strassen")
+
+
 def _valid_entry(entry) -> bool:
     return (isinstance(entry, dict) and isinstance(entry.get("plan"), dict)
             and len(entry["plan"]) > 0
-            and all(isinstance(v, int) and v > 0
-                    for v in entry["plan"].values()))
+            and all(_valid_plan_value(v) for v in entry["plan"].values()))
 
 
 def load_table(kind: Optional[str] = None) -> dict:
@@ -251,6 +280,7 @@ def save_table(kind: Optional[str] = None) -> Path:
 def clear_cache() -> None:
     """Drop the in-process table cache (tests that redirect REPRO_TUNE_DIR)."""
     _TABLE_CACHE.clear()
+    _INTERP_LOGGED.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -261,10 +291,16 @@ def clear_cache() -> None:
 @dataclass(frozen=True)
 class OpTuneInfo:
     """dims(*args) maps each tile kwarg to the axis size it must divide;
-    working_set(plan, *args) models the plan's resident bytes."""
+    working_set(plan, *args) models the plan's resident bytes (tile kwargs
+    only).  ``variants(base, *args, dp=...)`` — when set — returns the
+    non-tile alternatives to cross with the tile ladder (backend/cutoff,
+    schedule flags), base (the analytic choice) first; ``variant_keys``
+    names the plan keys that replay verbatim instead of snapping."""
 
     dims: Callable[..., dict]
     working_set: Callable[..., int]
+    variants: Optional[Callable[..., list]] = None
+    variant_keys: tuple = ()
 
 
 def _scan_dims(x):
@@ -307,6 +343,33 @@ def _attention_ws(plan, q, k, v):
         + 4 * qb * kb + 8 * qb
 
 
+def _matmul_variants(base, a, b, dp=None):
+    """Backend/schedule alternatives around the analytic matmul choice: flip
+    the ``morton`` grid flag, walk the Strassen cutoff one octave each way,
+    and always offer the *other* backend when the shape admits it — the
+    measured crossover may sit on either side of the modeled one."""
+    base = dict(base)
+    out = [base]
+    n = b.shape[1]
+    square = a.shape[0] == a.shape[1] == n
+    out.append({**base, "morton": False})
+    if base.get("backend") == "strassen":
+        cut = int(base.get("cutoff", n))
+        for c in (cut * 2, cut // 2):
+            if 64 <= c < n and c != cut:
+                out.append({**base, "cutoff": c})
+        out.append({"backend": "classical"})
+    elif (square and n % 2 == 0 and n // 2 >= 64
+          and jnp.dtype(a.dtype).name in planner._STRASSEN_DTYPES):
+        # one octave under the modeled gate: leaves of n/2
+        out.append({**base, "backend": "strassen", "cutoff": n // 2})
+    return out
+
+
+def _transpose_variants(base, x, dp=None):
+    return [dict(base), {**base, "morton": False}]
+
+
 def _fft_dims(x):
     return {"n1": x.shape[-1]}
 
@@ -321,8 +384,11 @@ def _fft_ws(plan, x):
 
 _TUNE: dict[str, OpTuneInfo] = {
     "scan": OpTuneInfo(_scan_dims, _scan_ws),
-    "matmul": OpTuneInfo(_matmul_dims, _matmul_ws),
-    "transpose": OpTuneInfo(_transpose_dims, _transpose_ws),
+    "matmul": OpTuneInfo(_matmul_dims, _matmul_ws, variants=_matmul_variants,
+                         variant_keys=("backend", "cutoff", "morton")),
+    "transpose": OpTuneInfo(_transpose_dims, _transpose_ws,
+                            variants=_transpose_variants,
+                            variant_keys=("morton",)),
     "attention": OpTuneInfo(_attention_dims, _attention_ws),
     "fft": OpTuneInfo(_fft_dims, _fft_ws),
 }
@@ -332,6 +398,15 @@ def tunable_ops() -> list[str]:
     return sorted(_TUNE)
 
 
+def variant_keys(op: str) -> tuple:
+    """The op's non-tile plan knobs (backend/cutoff/morton).  Dispatch feeds
+    forced variant overrides back into the table lookup through this, so a
+    call that pins e.g. ``backend="classical"`` replays the classical entry,
+    not the one keyed by the planner's own choice."""
+    info = _TUNE.get(op)
+    return info.variant_keys if info else ()
+
+
 # ---------------------------------------------------------------------------
 # candidate generation
 # ---------------------------------------------------------------------------
@@ -339,19 +414,29 @@ def tunable_ops() -> list[str]:
 def snap_plan(op: str, args, plan: dict) -> dict:
     """Clamp a tuned plan (possibly recorded for a same-class neighbour
     shape) back to the kernels' divisibility constraints: each tile becomes
-    the largest divisor of its axis not exceeding the tuned value."""
-    dims = _TUNE[op].dims(*args)
-    return {k: planner.divisor_tile(dims[k], int(v))
-            for k, v in plan.items() if k in dims}
+    the largest divisor of its axis not exceeding the tuned value; variant
+    knobs (backend/cutoff/morton) replay verbatim — the kernels gate their
+    own eligibility."""
+    info = _TUNE[op]
+    dims = info.dims(*args)
+    out = {}
+    for k, v in plan.items():
+        if k in dims:
+            out[k] = planner.divisor_tile(dims[k], int(v))
+        elif k in info.variant_keys:
+            out[k] = v
+    return out
 
 
 def candidates(op: str, *args, dp: Optional[planner.DeviceParams] = None,
                max_candidates: int = 16, span: int = 2) -> list[dict]:
     """Power-of-two ladder around the analytic plan: each tile kwarg ranges
     over factor 2**±``span`` of its planned value (snapped to divisors of its
-    axis), the cross product is filtered by the fast-memory envelope and
-    ranked by log-distance from the analytic point.  The analytic plan is
-    always candidate 0."""
+    axis), the cross product is filtered by the fast-memory envelope, crossed
+    with the op's variant alternatives (backend/cutoff, morton — see
+    ``OpTuneInfo.variants``), and ranked by log-distance from the analytic
+    point (each variant hop counts one octave).  The analytic plan is always
+    candidate 0."""
     from repro.kernels import registry  # the layer below; lazy to stay acyclic
 
     spec = registry.get(op)
@@ -359,9 +444,11 @@ def candidates(op: str, *args, dp: Optional[planner.DeviceParams] = None,
     dp = dp or planner.device_params()
     analytic = dict(spec.plan(*args))
     dims = info.dims(*args)
+    tile_analytic = {k: v for k, v in analytic.items() if k in dims}
+    variant_analytic = {k: v for k, v in analytic.items() if k not in dims}
 
     ladders: dict[str, list[int]] = {}
-    for key, base in analytic.items():
+    for key, base in tile_analytic.items():
         vals = set()
         for shift in range(-span, span + 1):
             target = base << shift if shift >= 0 else max(base >> -shift, 1)
@@ -369,21 +456,41 @@ def candidates(op: str, *args, dp: Optional[planner.DeviceParams] = None,
         ladders[key] = sorted(vals)
 
     keys = sorted(ladders)
-    plans = []
+    tile_plans = [tile_analytic]
     for combo in itertools.product(*(ladders[k] for k in keys)):
         plan = dict(zip(keys, combo))
-        if plan == analytic:
+        if plan == tile_analytic:
             continue
         if info.working_set(plan, *args) > dp.fast_bytes:
             continue
-        plans.append(plan)
+        tile_plans.append(plan)
+
+    variants = ([dict(variant_analytic)] if info.variants is None
+                else info.variants(variant_analytic, *args, dp=dp))
 
     def dist(p: dict) -> float:
-        return sum(abs(math.log2(p[k]) - math.log2(max(analytic[k], 1)))
+        return sum(abs(math.log2(p[k]) - math.log2(max(tile_analytic[k], 1)))
                    for k in keys)
 
-    plans.sort(key=lambda p: (dist(p), tuple(p[k] for k in keys)))
-    return [analytic] + plans[:max(max_candidates - 1, 0)]
+    def order_key(plan: dict):
+        return tuple(sorted((k, str(v)) for k, v in plan.items()))
+
+    scored, seen = [], set()
+    for vi, var in enumerate(variants):
+        for ti, tiles in enumerate(tile_plans):
+            plan = {**tiles, **var}
+            key = order_key(plan)
+            if key in seen:
+                continue
+            seen.add(key)
+            # a variant flip at the analytic tiles is the interesting
+            # hypothesis (backend/cutoff/morton) — rank it right behind the
+            # analytic plan, ahead of the tile fine-tuning ladder
+            score = vi / 10.0 if (vi and ti == 0) else dist(tiles) + vi
+            scored.append((score, plan))
+    scored.sort(key=lambda t: (t[0], order_key(t[1])))
+    rest = [p for _, p in scored if p != analytic]
+    return [analytic] + rest[:max(max_candidates - 1, 0)]
 
 
 # ---------------------------------------------------------------------------
@@ -467,16 +574,79 @@ def lookup(op: str, *args, kwargs: Optional[dict] = None) -> Optional[dict]:
     return dict(entry["plan"]) if entry else None
 
 
+# (tune_dir, wanted key, borrowed key) triples already logged — interpolation
+# fires on every dispatch trace of a cold shape, so log once, not per trace
+_INTERP_LOGGED: set[tuple] = set()
+
+
+def _shape_distance(a: str, b: str) -> Optional[float]:
+    """Log2 distance between two ``shape_class`` strings; None when the
+    array structures differ (different arity or rank — not comparable)."""
+    pa, pb = a.split("_"), b.split("_")
+    if len(pa) != len(pb):
+        return None
+    total = 0.0
+    for xa, xb in zip(pa, pb):
+        da, db = xa.split("x"), xb.split("x")
+        if len(da) != len(db):
+            return None
+        for u, v in zip(da, db):
+            if u == "scalar" or v == "scalar":
+                if u != v:
+                    return None
+                continue
+            total += abs(math.log2(int(u)) - math.log2(int(v)))
+    return total
+
+
+def nearest_plan(op: str, *args, kwargs: Optional[dict] = None) -> Optional[dict]:
+    """Cross-shape interpolation: on an exact-key miss, borrow the tuned
+    plan from the *nearest* recorded shape_class with the same
+    ``(op, dtype, semantic flags)`` — a neighbouring shape's measured
+    constants beat the cold analytic plan.  Logs once per borrowed key."""
+    table = load_table()
+    if not table:
+        return None
+    want = entry_key(op, *args, kwargs=kwargs)
+    wop, wshape, wrest = want.split("|", 2)
+    best = None
+    for key, entry in table.items():
+        try:
+            kop, kshape, krest = key.split("|", 2)
+        except ValueError:
+            continue
+        if kop != wop or krest != wrest or kshape == wshape:
+            continue
+        d = _shape_distance(wshape, kshape)
+        if d is None:
+            continue
+        if best is None or (d, key) < (best[0], best[1]):
+            best = (d, key, entry)
+    if best is None:
+        return None
+    _, key, entry = best
+    tag = (str(tune_dir()), want, key)
+    if tag not in _INTERP_LOGGED:
+        _INTERP_LOGGED.add(tag)
+        log.info("autotune: no tuned entry for %s; interpolating from "
+                 "nearest recorded class %s", want, key)
+    return dict(entry["plan"])
+
+
 def overlay(op: str, args, *, search_kwargs: Optional[dict] = None) -> dict:
     """Tuned tile kwargs to merge over the analytic plan (empty dict when
     the mode is off, the op is untunable, or the cache is cold).  In
-    ``search`` mode a miss on concrete arrays triggers an in-line search."""
+    ``search`` mode a miss on concrete arrays triggers an in-line search;
+    otherwise a miss falls back to cross-shape interpolation
+    (:func:`nearest_plan`) before going cold."""
     m = mode()
     if m == "off" or op not in _TUNE:
         return {}
     plan = lookup(op, *args, kwargs=search_kwargs)
     if plan is None and m == "search" and _concrete(args):
         plan = dict(search(op, *args, **(search_kwargs or {}))["plan"])
+    if plan is None:
+        plan = nearest_plan(op, *args, kwargs=search_kwargs)
     if plan is None:
         return {}
     return snap_plan(op, args, plan)

@@ -11,7 +11,11 @@ access).
 
 Tile sizes default to ``None`` = planned from the queried device through
 ``repro.kernels.planner`` (no hard-coded block constants); pass explicit
-values to override.
+values to override.  Ragged shapes snap each override down to the largest
+divisor of its axis instead of asserting, and a degenerate snap (prime-ish
+dims forcing a sub-sublane tile on a long axis) falls back to the jnp
+oracle.  ``out_dtype`` lets the Strassen-schedule wrapper keep the f32
+accumulator through its combination tree instead of rounding at every leaf.
 """
 from __future__ import annotations
 
@@ -40,23 +44,34 @@ def _mm_kernel(a_ref, b_ref, out_ref, acc_ref, *, nk: int):
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "morton", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "morton",
+                                             "interpret", "out_dtype"))
 def hbp_matmul(a: jax.Array, b: jax.Array, *, bm: Optional[int] = None,
                bn: Optional[int] = None, bk: Optional[int] = None,
-               morton: bool = True, interpret: bool = True) -> jax.Array:
+               morton: bool = True, interpret: bool = True,
+               out_dtype=None) -> jax.Array:
     """C = A @ B with Morton-ordered output tiles.  A: (m, k), B: (k, n)."""
+    from repro.kernels import planner
+
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
+    out_dtype = jnp.dtype(a.dtype if out_dtype is None else out_dtype)
     if bm is None or bn is None or bk is None:
-        from repro.kernels import planner
-
         plan = planner.plan_matmul(m, k, n, a.dtype)
         bm = bm if bm is not None else plan["bm"]
         bn = bn if bn is not None else plan["bn"]
         bk = bk if bk is not None else plan["bk"]
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    # ragged dims snap each tile to the largest divisor of its axis (planner
+    # plans are divisor-exact already; this covers explicit/tuned overrides)
+    bm = planner.divisor_tile(m, min(int(bm), m))
+    bn = planner.divisor_tile(n, min(int(bn), n))
+    bk = planner.divisor_tile(k, min(int(bk), k))
+    # a degenerate snap (prime-ish dim -> sub-sublane tile on a long axis)
+    # would run a catastrophically fine grid; take the jnp oracle instead
+    if (bm < 8 <= m) or (bn < 8 <= n) or (bk < 8 <= k):
+        return jnp.dot(a.astype(jnp.float32),
+                       b.astype(jnp.float32)).astype(out_dtype)
     nm, nn, nk = m // bm, n // bn, k // bk
 
     decode = grid_decode(nm, nn, morton=morton)
@@ -82,7 +97,7 @@ def hbp_matmul(a: jax.Array, b: jax.Array, *, bm: Optional[int] = None,
             pl.BlockSpec((bk, bn), b_map),
         ],
         out_specs=pl.BlockSpec((bm, bn), o_map),
-        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a, b)

@@ -180,21 +180,66 @@ def plan_scan(shape, dtype, dp: Optional[DeviceParams] = None) -> dict:
     return {"block": divisor_tile(n, cap, dp.lane)}
 
 
+# dtypes the Strassen schedule may serve: the 18 extra adds per level are
+# benign under f32 accumulation (fp32 natively, bf16 with f32 acc); low-
+# precision integer/fp8 matmuls lose more to the adds than the 7/8 work
+# saving buys, so they stay classical
+_STRASSEN_DTYPES = ("float32", "bfloat16")
+
+
+def strassen_cutoff(dtype, dp: Optional[DeviceParams] = None) -> int:
+    """Recursion cutoff for the Strassen-schedule matmul: the largest
+    power-of-two edge where the classical envelope still wins at the queried
+    device params (``costmodel.strassen_crossover_edge`` over the planner's
+    budgeted fast memory, in elements of ``dtype``)."""
+    dp = dp or device_params()
+    itemsize = jnp.dtype(dtype).itemsize
+    m_elems = max(_budget(dp) // itemsize, 2)
+    b_elems = max(dp.line_bytes // itemsize, 1)
+    return costmodel.strassen_crossover_edge(m_elems, b_elems)
+
+
+def plan_matmul_backend(m: int, k: int, n: int, dtype,
+                        dp: Optional[DeviceParams] = None) -> dict:
+    """Matmul backend choice by the costmodel envelopes: ``strassen`` (plus
+    its recursion ``cutoff``) when the shape is square with pow2-friendly
+    halving down to the modeled crossover edge and the dtype tolerates the
+    extra adds (fp32 / bf16-with-f32-acc); ``classical`` otherwise."""
+    dp = dp or device_params()
+    if not (m == k == n and jnp.dtype(dtype).name in _STRASSEN_DTYPES):
+        return {"backend": "classical"}
+    cut = strassen_cutoff(dtype, dp)
+    levels, edge = 0, n
+    while edge > cut and edge % 2 == 0:
+        edge //= 2
+        levels += 1
+    # the recursion must reach the classical-wins regime by halving alone
+    # (an odd edge stuck above the cutoff leaves oversized classical leaves)
+    if levels == 0 or edge > cut:
+        return {"backend": "classical"}
+    return {"backend": "strassen", "cutoff": cut}
+
+
 def plan_matmul(m: int, k: int, n: int, dtype,
                 dp: Optional[DeviceParams] = None) -> dict:
     """Square (bm, bn, bk) tiles from the O(sqrt M) envelope: two operand
-    tiles in ``dtype`` plus the f32 accumulator must fit the budget."""
+    tiles in ``dtype`` plus the f32 accumulator must fit the budget.  The
+    plan also carries the envelope-selected ``backend`` ("classical" |
+    "strassen" + recursion ``cutoff``); the registry's matmul entry point
+    resolves the variant at dispatch."""
     dp = dp or device_params()
     itemsize = jnp.dtype(dtype).itemsize
     # bytes(t) = 2 t^2 itemsize (A, B panels) + 4 t^2 (f32 acc)
     edge = costmodel.oblivious_tile_edge(_budget(dp), 1, 2 * itemsize + 4)
     t = _pow2_floor(edge)
     sub = dp.sublane(dtype)
-    return {
+    plan = {
         "bm": divisor_tile(m, t, sub),
         "bn": divisor_tile(n, t, dp.lane),
         "bk": divisor_tile(k, t, dp.lane),
     }
+    plan.update(plan_matmul_backend(m, k, n, dtype, dp))
+    return plan
 
 
 def plan_transpose(m: int, n: int, dtype,

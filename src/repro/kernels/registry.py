@@ -28,7 +28,7 @@ from repro.kernels.bi_fft import bi_fft
 from repro.kernels.bi_transpose import bi_transpose
 from repro.kernels.bp_scan import bp_scan
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.hbp_matmul import hbp_matmul
+from repro.kernels.strassen_matmul import matmul as backend_matmul
 
 
 def on_tpu() -> bool:
@@ -123,7 +123,13 @@ def dispatch(name: str, *args, prefer_ref: Optional[bool] = None,
     tiles = dict(spec.plan(*args))
     from repro.kernels import autotune  # the measured layer above dispatch
 
-    tiles.update(autotune.overlay(name, args, search_kwargs=kwargs))
+    # forced variant knobs (e.g. matmul backend) select which table entry to
+    # replay — key the lookup on them alongside the semantic kwargs; tile
+    # overrides stay out (they win over the overlay below regardless)
+    variant = {k: v for k, v in overrides.items()
+               if v is not None and k in autotune.variant_keys(name)}
+    tiles.update(autotune.overlay(name, args,
+                                  search_kwargs={**kwargs, **variant}))
     tiles.update({k: v for k, v in overrides.items() if v is not None})
     if interpret is None:
         interpret = not native
@@ -144,11 +150,15 @@ register(KernelSpec(
 
 register(KernelSpec(
     name="matmul",
-    pallas=hbp_matmul,
+    # the variant entry point: resolves the plan's backend field
+    # ("classical" -> hbp_matmul, "strassen" -> the quadrant recursion) and
+    # carries a custom VJP (dA = g B^T, dB = A^T g through the same kernels)
+    pallas=backend_matmul,
     ref=ref.matmul_ref,
     plan=lambda a, b: planner.plan_matmul(a.shape[0], a.shape[1], b.shape[1],
                                           a.dtype),
-    pallas_only=("bm", "bn", "bk", "morton"),
+    pallas_only=("bm", "bn", "bk", "morton", "backend", "cutoff"),
+    has_vjp=True,
 ))
 
 register(KernelSpec(

@@ -118,13 +118,20 @@ def main():
                     help="attention backend for prefill AND decode (the "
                          "kernel covers both since it learned q_offset/"
                          "kv_len); 'auto' asks the kernel registry")
+    ap.add_argument("--matmul-impl", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="backend for model matmuls (gated MLP + output "
+                         "logits): the registry's planner/autotune-tiled, "
+                         "classical-or-Strassen kernel vs the XLA einsum; "
+                         "'auto' asks the kernel registry")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.reduced else get_config(args.arch)
     from repro.launch.mesh import make_debug_mesh
     mesh = make_debug_mesh(tp=min(2, len(jax.devices())))
     server = Server(cfg, mesh, max_batch=args.batch, max_len=128,
-                    opts=RunOptions(attention_impl=args.attention_impl))
+                    opts=RunOptions(attention_impl=args.attention_impl,
+                                    matmul_impl=args.matmul_impl))
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(3, cfg.vocab_size, rng.integers(4, 20)).astype(np.int32),
                     max_new=args.max_new) for i in range(args.batch)]

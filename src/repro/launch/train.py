@@ -124,6 +124,12 @@ def main():
     ap.add_argument("--reduced", action="store_true", help="smoke-size config")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--save-every", type=int, default=0)
+    ap.add_argument("--attention-impl", default="auto",
+                    choices=("auto", "jnp", "pallas"))
+    ap.add_argument("--matmul-impl", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="backend for model matmuls (gated MLP + logits): "
+                         "registry kernels (classical/Strassen) vs XLA einsum")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.reduced else get_config(args.arch)
@@ -132,6 +138,8 @@ def main():
     mesh = make_debug_mesh(n, tp=min(2, n))
     out = train(cfg, mesh=mesh, steps=args.steps,
                 data_cfg=DataConfig(global_batch=args.batch, seq_len=args.seq),
+                opts=RunOptions(attention_impl=args.attention_impl,
+                                matmul_impl=args.matmul_impl),
                 ckpt_dir=args.ckpt_dir, save_every=args.save_every)
     print(f"final loss {out['losses'][-1]:.4f} (first {out['losses'][0]:.4f}) "
           f"in {out['wall_s']:.1f}s")

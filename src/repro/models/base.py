@@ -34,6 +34,11 @@ class RunOptions:
     # The Pallas kernel carries a custom VJP and decode (q_offset/kv_len)
     # support, so the knob applies uniformly to train, prefill, and decode
     attention_impl: str = "auto"
+    # kernel backend for model matmuls (gated MLP + output logits): "auto"
+    # consults the registry; "jnp" | "pallas" force.  The matmul kernel
+    # resolves the planner's classical/Strassen backend choice at dispatch
+    # and carries a custom VJP, so the knob applies to train and serve alike
+    matmul_impl: str = "auto"
     # measured-autotune mode for kernel dispatch: "off" | "replay" | "search";
     # None = resolved by the kernel planner (REPRO_AUTOTUNE, default "replay",
     # a no-op on a cold tile cache).  Launchers pin the resolved mode at

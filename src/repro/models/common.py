@@ -466,29 +466,80 @@ def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=
 
 
 # ---------------------------------------------------------------------------
-# MLP
+# MLP / projections through the kernel registry
 # ---------------------------------------------------------------------------
 
-def gated_mlp(x, w_gate, w_up, w_down):
-    """SwiGLU MLP."""
-    g = jnp.einsum("...d,df->...f", x, w_gate)
-    u = jnp.einsum("...d,df->...f", x, w_up)
+def resolve_matmul_impl(impl: str) -> str:
+    """The attention ``impl`` knob's twin for model matmuls: "auto" asks the
+    registry (Pallas on TPU, jnp elsewhere); a kernel without a registered
+    backward may not serve the route (the model layer cannot tell a
+    forward-only call from a traced-for-grad one) and falls back to jnp."""
+    if impl == "auto":
+        from repro.kernels import registry
+
+        impl = "pallas" if registry.default_impl("matmul") == "pallas" else "jnp"
+    if impl == "pallas":
+        from repro.kernels import registry
+
+        if not registry.get("matmul").has_vjp:
+            impl = "jnp"
+    return impl
+
+
+def project(x, w, *, impl: str = "jnp"):
+    """x: (..., d) @ w: (d, f) -> (..., f).  ``impl="pallas"`` folds the
+    leading dims and dispatches the registry's matmul — planner-tiled,
+    backend-selected (classical/Strassen by the costmodel envelopes),
+    autotune-overlaid, differentiable via the kernel's custom VJP.  "jnp"
+    keeps the XLA einsum."""
+    if resolve_matmul_impl(impl) == "pallas":
+        from repro.kernels import registry
+
+        lead = x.shape[:-1]
+        out = registry.dispatch("matmul", x.reshape(-1, x.shape[-1]), w,
+                                prefer_ref=False)
+        return out.reshape(*lead, w.shape[-1])
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+def gated_mlp(x, w_gate, w_up, w_down, *, impl: str = "jnp"):
+    """SwiGLU MLP; ``impl`` routes the three projections through the kernel
+    registry (see :func:`project`) with the jnp einsum fallback."""
+    g = project(x, w_gate, impl=impl)
+    u = project(x, w_up, impl=impl)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     h = constrain(h, *(["batch"] + ["*"] * (h.ndim - 2) + ["ffn"]))
-    out = jnp.einsum("...f,fd->...d", h, w_down)
+    out = project(h, w_down, impl=impl)
     if out.ndim == 3:
         return constrain(out, "batch", "seq", "*")
     return constrain(out, *(["batch"] + ["*"] * (out.ndim - 1)))
+
+
+def logits_matmul(h, embed_out, *, impl: str = "jnp"):
+    """Output-logits product h @ embed_outᵀ in fp32.  h: (..., d),
+    embed_out: (V, d) -> (..., V).  The hottest serve-path matmul: the
+    pallas route dispatches the registry's backend-selected kernel."""
+    if resolve_matmul_impl(impl) == "pallas":
+        from repro.kernels import registry
+
+        lead = h.shape[:-1]
+        out = registry.dispatch("matmul", h.reshape(-1, h.shape[-1]),
+                                embed_out.T, prefer_ref=False)
+        return out.reshape(*lead, embed_out.shape[0]).astype(jnp.float32)
+    return jnp.einsum("...d,vd->...v", h, embed_out).astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------
 # loss
 # ---------------------------------------------------------------------------
 
-def chunked_softmax_xent(hidden, embed_out, labels, *, chunk: int = 512):
+def chunked_softmax_xent(hidden, embed_out, labels, *, chunk: int = 512,
+                         impl: str = "jnp"):
     """Cross-entropy computed in sequence chunks so the (tokens, vocab) logits
     tensor never materializes in full (the paper's principle of bounding the
-    working set of a task; each chunk is one BP leaf).
+    working set of a task; each chunk is one BP leaf).  ``impl`` routes the
+    per-chunk logits matmul through the kernel registry (the matmul kernel's
+    custom VJP keeps the route differentiable under the chunk remat).
 
     hidden: (b, s, d);  embed_out: (V, d);  labels: (b, s) int32 with -100 pad.
     Returns mean loss (fp32 scalar).
@@ -505,7 +556,7 @@ def chunked_softmax_xent(hidden, embed_out, labels, *, chunk: int = 512):
     def per_chunk(carry, xs):
         h, lab = xs
         h = constrain(h, "batch", "*", "*")
-        logits = jnp.einsum("bsd,vd->bsv", h, embed_out).astype(jnp.float32)
+        logits = logits_matmul(h, embed_out, impl=impl)
         logits = constrain(logits, "batch", "*", "vocab")
         lse = jax.nn.logsumexp(logits, axis=-1)
         valid = lab >= 0

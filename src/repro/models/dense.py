@@ -154,7 +154,8 @@ class DenseLM(Model):
                 impl=self.opts.moe_dispatch, n_groups=self.opts.moe_groups,
             )
             return x + y.reshape(b, s, d), aux
-        return x + common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"]), jnp.zeros((), jnp.float32)
+        return x + common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"],
+                                    impl=self.opts.matmul_impl), jnp.zeros((), jnp.float32)
 
     # -- forward (training) --------------------------------------------------
     def _backbone(self, params, tokens, q_pos, k_pos, *, caches=None, write_at=None):
@@ -207,7 +208,8 @@ class DenseLM(Model):
         pos = jnp.arange(s, dtype=jnp.int32)
         x, _, aux = self._backbone(params, inputs, pos, pos)
         ce = common.chunked_softmax_xent(x, self._out_embed(params), labels,
-                                         chunk=self.opts.ce_chunk)
+                                         chunk=self.opts.ce_chunk,
+                                         impl=self.opts.matmul_impl)
         return ce + cfg.router_aux_weight * aux / max(cfg.n_layers, 1)
 
     # -- inference -----------------------------------------------------------
@@ -229,7 +231,8 @@ class DenseLM(Model):
         x, (kc, vc), _ = self._backbone(
             params, tokens, q_pos, k_pos, caches=(cache["k"], cache["v"]), write_at=0
         )
-        logits = jnp.einsum("bd,vd->bv", x[:, -1], self._out_embed(params)).astype(jnp.float32)
+        logits = common.logits_matmul(x[:, -1], self._out_embed(params),
+                                      impl=self.opts.matmul_impl)
         return logits, {"k": kc, "v": vc}
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
@@ -241,5 +244,6 @@ class DenseLM(Model):
         x, (kc, vc), _ = self._backbone(
             params, tokens, q_pos, k_pos, caches=(cache["k"], cache["v"]), write_at=pos
         )
-        logits = jnp.einsum("bd,vd->bv", x[:, -1], self._out_embed(params)).astype(jnp.float32)
+        logits = common.logits_matmul(x[:, -1], self._out_embed(params),
+                                      impl=self.opts.matmul_impl)
         return logits, {"k": kc, "v": vc}

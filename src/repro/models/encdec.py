@@ -91,7 +91,8 @@ class EncDecLM(Model):
                 jnp.einsum("bsq,qd->bsd", o.reshape(x.shape[0], s, cfg.q_dim), pl["attn"]["wo"]),
                 "batch", "seq", "*")
             h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
-            x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+            x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"],
+                                 impl=self.opts.matmul_impl)
             return x, None
 
         fn = maybe_remat(layer_fn, self.opts)
@@ -145,7 +146,8 @@ class EncDecLM(Model):
                 "batch", "seq", "*")
 
             h = common.rms_norm(x, pl["ln3"], cfg.norm_eps)
-            x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+            x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"],
+                                 impl=self.opts.matmul_impl)
             ys = None if caches is None else (kc, vc)
             return x, ys
 
@@ -180,7 +182,8 @@ class EncDecLM(Model):
         pos = jnp.arange(s, dtype=jnp.int32)
         enc_out = self._encoder(params, frames)
         x, _ = self._decoder(params, inputs, enc_out, pos, pos)
-        return common.chunked_softmax_xent(x, params["lm_head"], labels, chunk=self.opts.ce_chunk)
+        return common.chunked_softmax_xent(x, params["lm_head"], labels, chunk=self.opts.ce_chunk,
+                                         impl=self.opts.matmul_impl)
 
     def enc_len(self, seq_len: int) -> int:
         return max(int(seq_len * self.cfg.encoder_len_ratio), 16)
@@ -206,7 +209,8 @@ class EncDecLM(Model):
         x, (kc, vc) = self._decoder(params, tokens, None, q_pos, k_pos,
                                     caches=(cache["k"], cache["v"]), write_at=0,
                                     cross_kv=(xk, xv))
-        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"]).astype(jnp.float32)
+        logits = common.logits_matmul(x[:, -1], params["lm_head"],
+                                      impl=self.opts.matmul_impl)
         return logits, {"k": kc, "v": vc, "xk": xk, "xv": xv}
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
@@ -216,7 +220,8 @@ class EncDecLM(Model):
         x, (kc, vc) = self._decoder(params, tokens, None, q_pos, k_pos,
                                     caches=(cache["k"], cache["v"]), write_at=pos,
                                     cross_kv=(cache["xk"], cache["xv"]))
-        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"]).astype(jnp.float32)
+        logits = common.logits_matmul(x[:, -1], params["lm_head"],
+                                      impl=self.opts.matmul_impl)
         return logits, {"k": kc, "v": vc, "xk": cache["xk"], "xv": cache["xv"]}
 
     def batch_extras_specs(self, batch_size, seq_len):

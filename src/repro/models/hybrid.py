@@ -147,7 +147,8 @@ class HybridLM(Model):
         out = (hseq * gate).astype(x.dtype)
         x = x + common.constrain(jnp.einsum("bsw,wd->bsd", out, pl["w_out"]), "batch", "seq", "*")
         h2 = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
-        x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"])
+        x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"],
+                                 impl=self.opts.matmul_impl)
         return x, new_state, new_conv
 
     def _attn_block(self, pl, x, q_pos, k_pos, kc=None, vc=None, write_at=None):
@@ -194,7 +195,8 @@ class HybridLM(Model):
             jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"]),
             "batch", "seq", "*")
         h2 = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
-        x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"])
+        x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"],
+                                 impl=self.opts.matmul_impl)
         return x, (kc, vc)
 
     # -- forward ------------------------------------------------------------------
@@ -252,7 +254,8 @@ class HybridLM(Model):
         s = tokens.shape[1]
         pos = jnp.arange(s, dtype=jnp.int32)
         x, _ = self._backbone(params, inputs, pos, pos)
-        return common.chunked_softmax_xent(x, params["embed"], labels, chunk=self.opts.ce_chunk)
+        return common.chunked_softmax_xent(x, params["embed"], labels, chunk=self.opts.ce_chunk,
+                                         impl=self.opts.matmul_impl)
 
     # -- inference -------------------------------------------------------------------
     def _attn_cache_len(self, max_len):
@@ -291,7 +294,8 @@ class HybridLM(Model):
         k_pos = jnp.arange(max_len, dtype=jnp.int32)
         cache = self.init_cache(b, max_len)
         x, new_cache = self._backbone(params, tokens, q_pos, k_pos, cache=cache, write_at=0)
-        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"]).astype(jnp.float32)
+        logits = common.logits_matmul(x[:, -1], params["embed"],
+                                      impl=self.opts.matmul_impl)
         return logits, new_cache
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
@@ -309,5 +313,6 @@ class HybridLM(Model):
             write_at = pos
         x, new_cache = self._backbone(params, tokens, q_pos, k_pos, cache=cache,
                                       write_at=write_at)
-        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"]).astype(jnp.float32)
+        logits = common.logits_matmul(x[:, -1], params["embed"],
+                                      impl=self.opts.matmul_impl)
         return logits, new_cache

@@ -90,7 +90,8 @@ class VisionLM(Model):
                              "batch", "seq", "*")
         x = x + o
         h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
-        x = x + common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"])
+        x = x + common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"],
+                                 impl=self.opts.matmul_impl)
         return x, (kc, vc)
 
     def _cross_attn_block(self, pl, x, img_k, img_v):
@@ -109,7 +110,8 @@ class VisionLM(Model):
                              "batch", "seq", "*")
         x = x + jnp.tanh(pl["xgate_attn"].astype(jnp.float32)).astype(x.dtype) * o
         h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
-        m = common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"])
+        m = common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"],
+                                 impl=self.opts.matmul_impl)
         return x + jnp.tanh(pl["xgate_ffn"].astype(jnp.float32)).astype(x.dtype) * m
 
     def _image_kv(self, pl_cross, img):
@@ -170,7 +172,8 @@ class VisionLM(Model):
         s = tokens.shape[1]
         pos = jnp.arange(s, dtype=jnp.int32)
         x, _ = self._backbone(params, inputs, img, pos, pos)
-        return common.chunked_softmax_xent(x, params["lm_head"], labels, chunk=self.opts.ce_chunk)
+        return common.chunked_softmax_xent(x, params["lm_head"], labels, chunk=self.opts.ce_chunk,
+                                         impl=self.opts.matmul_impl)
 
     # -- inference ---------------------------------------------------------------
     def init_cache(self, batch_size, max_len):
@@ -201,7 +204,8 @@ class VisionLM(Model):
             params, tokens, None, q_pos, k_pos,
             caches=(cache["k"], cache["v"]), write_at=0, img_kv=(img_k, img_v),
         )
-        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"]).astype(jnp.float32)
+        logits = common.logits_matmul(x[:, -1], params["lm_head"],
+                                      impl=self.opts.matmul_impl)
         return logits, {"k": kc, "v": vc, "img_k": img_k, "img_v": img_v}
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
@@ -214,7 +218,8 @@ class VisionLM(Model):
             caches=(cache["k"], cache["v"]), write_at=pos,
             img_kv=(cache["img_k"], cache["img_v"]),
         )
-        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"]).astype(jnp.float32)
+        logits = common.logits_matmul(x[:, -1], params["lm_head"],
+                                      impl=self.opts.matmul_impl)
         return logits, {"k": kc, "v": vc, "img_k": cache["img_k"], "img_v": cache["img_v"]}
 
     def batch_extras_specs(self, batch_size, seq_len):

@@ -52,10 +52,13 @@ def test_candidates_satisfy_divisibility_and_envelope(name, dtype):
     assert cands[0] == dict(registry.get(name).plan(*args))  # analytic first
     seen = set()
     for plan in cands:
-        key = tuple(sorted(plan.items()))
+        key = tuple(sorted((k, str(v)) for k, v in plan.items()))
         assert key not in seen  # no duplicate timings
         seen.add(key)
         for k, v in plan.items():
+            if k not in dims:  # variant knobs (backend/cutoff/morton)
+                assert k in info.variant_keys, (name, k)
+                continue
             assert dims[k] % v == 0, (name, plan)
         assert info.working_set(plan, *args) <= dp.fast_bytes, (name, plan)
 
@@ -92,6 +95,9 @@ def test_candidates_property_random_shapes():
         axis = info.dims(*args)
         for plan in autotune.candidates(name, *args, dp=dp):
             for k, v in plan.items():
+                if k not in axis:  # variant knobs (backend/cutoff/morton)
+                    assert k in info.variant_keys
+                    continue
                 assert axis[k] % v == 0
             assert info.working_set(plan, *args) <= dp.fast_bytes
 

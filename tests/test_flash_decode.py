@@ -153,7 +153,10 @@ def test_vjp_grads_with_offsets():
 def test_registry_attention_has_backward_entry():
     spec = registry.get("attention")
     assert spec.has_vjp
-    assert not registry.get("matmul").has_vjp
+    # matmul gained its own custom VJP in PR 4 (model matmuls train through
+    # the kernel route); scan remains forward-only
+    assert registry.get("matmul").has_vjp
+    assert not registry.get("scan").has_vjp
 
 
 # -- model-layer routing ------------------------------------------------------

@@ -2,7 +2,8 @@
 
 For every registered op this times:
 
-  * ``ref``            — the jnp oracle path (``dispatch(..., prefer_ref=True)``)
+  * ``ref``            — the jnp oracle path (``dispatch(..., impl="ref")``,
+                         the per-call policy override)
                          — the XLA numbers that matter on this CPU container;
   * ``pallas_fixed``   — the Pallas path (interpret mode on CPU) with the
                          pre-substrate hard-coded tiles (128 / 512 / 256);
@@ -16,8 +17,8 @@ The ``matmul_strassen`` case additionally records ``pallas_classical_us``
 (which routes the planner's Strassen choice at that shape), so the
 crossover claim — Strassen beats classical above the modeled edge — is
 measured, not asserted.  The ``mlp`` case times the model-level
-``gated_mlp`` with ``impl="jnp"`` vs ``impl="pallas"`` (the registry route
-model traffic takes).
+``gated_mlp`` under a jnp vs a pallas execution-policy scope (the registry
+route model traffic takes).
 
 Interpret-mode wall times are NOT meaningful device performance; they are
 recorded so the before/after planner tiling delta is machine-checkable.  On
@@ -115,9 +116,10 @@ def _cases():
 
 
 def _bench_mlp() -> dict:
-    """Model-level arm: ``gated_mlp`` with the jnp einsum path vs the kernel
-    registry route (``impl="pallas"``) — what serve/train traffic sees once
-    model matmuls dispatch through the substrate."""
+    """Model-level arm: ``gated_mlp`` under a jnp vs a pallas execution
+    policy scope — what serve/train traffic sees once model matmuls dispatch
+    through the substrate."""
+    from repro.kernels import policy
     from repro.models import common as model_common
 
     key = jax.random.key
@@ -128,9 +130,10 @@ def _bench_mlp() -> dict:
     flops = 3 * 2 * 512 * 256 * 1024
     entry: dict = {"op": "mlp", "shape": "512x256x1024"}
     with autotune.mode_scope("off"):
-        for arm, impl in (("jnp", "jnp"), ("pallas_planned", "pallas")):
-            fn = jax.jit(lambda *a, _i=impl: model_common.gated_mlp(*a, impl=_i))
-            us = timeit(fn, x, wg, wu, wd)
+        for arm, backend in (("jnp", "jnp"), ("pallas_planned", "pallas")):
+            with policy.apply(impl={"matmul": backend}):
+                fn = jax.jit(lambda *a: model_common.gated_mlp(*a))
+                us = timeit(fn, x, wg, wu, wd)
             entry[f"{arm}_us"] = round(us, 1)
             print(f"kernel_mlp_{arm}_512x256x1024,{us:.0f},"
                   f"{flops / (us / 1e6) / 1e9:.1f}GFLOP/s")
@@ -148,7 +151,7 @@ def main(json_path: str | None = None, ops: list[str] | None = None) -> dict:
         entry: dict = {"op": op, "shape": case["label"], "planned_tiles": plan}
 
         ref_fn = jax.jit(lambda *a, _n=op, _kw=kwargs: registry.dispatch(
-            _n, *a, prefer_ref=True, **_kw))
+            _n, *a, impl="ref", **_kw))
         us = timeit(ref_fn, *args)
         entry["ref_us"] = round(us, 1)
         print(f"kernel_{name}_ref_{case['label']},{us:.0f},{case['derived'](us)}")
@@ -160,7 +163,7 @@ def main(json_path: str | None = None, ops: list[str] | None = None) -> dict:
         with autotune.mode_scope("off"):
             for arm, tiles in arms:
                 fn = jax.jit(lambda *a, _n=op, _kw=kwargs, _t=tiles: registry.dispatch(
-                    _n, *a, prefer_ref=False, **_kw, **_t))
+                    _n, *a, impl="pallas", **_kw, **_t))
                 us = timeit(fn, *args, iters=5)
                 entry[f"{arm}_us"] = round(us, 1)
                 print(f"kernel_{name}_{arm}_{case['label']},{us:.0f},interpret")
@@ -176,7 +179,7 @@ def main(json_path: str | None = None, ops: list[str] | None = None) -> dict:
         entry["tuned_tiles"] = autotune.snap_plan(op, args, tuned) if tuned else plan
         with autotune.mode_scope("replay"):
             fn = jax.jit(lambda *a, _n=op, _kw=kwargs: registry.dispatch(
-                _n, *a, prefer_ref=False, **_kw))
+                _n, *a, impl="pallas", **_kw))
             us = timeit(fn, *args, iters=5)
         entry["pallas_tuned_us"] = round(us, 1)
         print(f"kernel_{name}_pallas_tuned_{case['label']},{us:.0f},interpret")

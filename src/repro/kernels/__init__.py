@@ -1,30 +1,46 @@
 """Resource-oblivious kernel substrate.
 
 The paper's claim — sequential-level cache and block costs *without knowing
-M or B* — carried from the simulator into the Pallas layer.  Three policy
+M or B* — carried from the simulator into the Pallas layer.  Four policy
 points, each in exactly one module:
 
+``policy``
+    The ambient :class:`~repro.kernels.policy.ExecutionPolicy`: ONE place
+    where every backend/variant/autotune decision lives, the way the
+    paper's scheduler keeps *where a task runs* out of the computation dag.
+    A frozen value object (per-op ``impl`` map with a ``"*"`` wildcard,
+    per-op ``variants``, ``autotune`` mode, ``interpret``,
+    ``strict_tiles``) on a context stack: the base is assembled from the
+    environment (``REPRO_IMPL`` with the ``op=backend[,op=backend]``
+    grammar, ``REPRO_STRICT_TILES``, ``REPRO_INTERPRET``), launchers
+    ``install()`` the ``--impl`` flag as a process layer, and
+    ``apply()``/``pin()`` push scoped overrides (a pin records its reason —
+    e.g. hybrid's ring-buffer decode, whose rotated cache violates the
+    flash kernel's contiguous-positions contract).  Model code never names
+    a backend; the deprecated ``RunOptions.attention_impl``/``matmul_impl``
+    knobs survive only as a compat shim that constructs an equivalent
+    scope.
+
 ``registry``
-    ``dispatch(name, *args, **kw)`` is the only way model / launch /
-    benchmark code invokes a kernel.  Each op (``scan``, ``matmul``,
-    ``transpose``, ``attention``, ``fft``) registers a ``KernelSpec``
-    holding its Pallas implementation, its ``ref.py`` oracle, a planner
-    hook, and a backend predicate.  Dispatch routes to the oracle on
-    backends where Pallas would not compile natively (``prefer_ref``
-    overrides), else calls the kernel with planned tiles; explicit tile
-    kwargs (``bm``/``bn``/``bk``, ``block``, ``bt``, ``q_block``/
-    ``kv_block``, ``n1``) win over the plan.
-    ``default_impl(name)`` exposes the choice to callers that keep their
-    own jnp path (e.g. blockwise attention with its custom VJP), and
-    ``KernelSpec.has_vjp`` marks ops whose Pallas path is itself safe
-    under autodiff.  ``attention`` is: the flash kernel registers a
-    recomputation-style backward (dq over the forward's grid, dk/dv over
-    the transposed KV-outer grid) and covers cached decode via two
-    semantic kwargs — ``q_offset`` (absolute position of query row 0,
-    traced scalars welcome) and ``kv_len`` (valid KV prefix; static
-    values shrink the KV grid itself, traced ones skip dead blocks with
-    ``pl.when``) — so serving prefill/decode and training all dispatch
-    through the same kernel.
+    ``resolve(name, **context)`` is the single backend-resolution code path
+    (it replaced ``resolve_matmul_impl``, the attention impl branch, and
+    ``default_impl``): policy lookup, ``auto`` expansion via
+    ``supported()``, then the capability gates — ``has_vjp`` (ops without a
+    registered backward never serve possibly-differentiated model callers)
+    and the per-op ``needs`` predicate (shape/dtype context the kernel
+    cannot take, e.g. a custom softmax scale).  ``dispatch(name, *args,
+    **kw)`` is the only way model / launch / benchmark code invokes a
+    kernel: the oracle for a jnp resolution, else the Pallas kernel with
+    planner tiles + autotune overlay + the policy's variant overrides +
+    explicit call-site kwargs (strongest last); ``impl=`` on the call is
+    the per-call escape hatch for experiments.  Each op (``scan``,
+    ``matmul``, ``transpose``, ``attention``, ``fft``) registers a
+    ``KernelSpec``; the ``attention`` kernel covers cached decode via
+    ``q_offset``/``kv_len`` and registers a recomputation backward, so
+    serving prefill/decode and training all dispatch through one path.
+    ``simulator_program(name, n)`` builds the op's access-trace HBP program
+    (``core.algorithms``) under the same name, so kernel dispatch and
+    simulator cost cross-checks share one op namespace.
 
 ``planner``
     Derives every tile shape at trace time from *queried* device parameters
@@ -56,11 +72,12 @@ accumulation preserved through the combination tree.  The registry's
 ``matmul`` entry (``strassen_matmul.matmul``) resolves the variant at
 dispatch and registers a custom VJP (dA = g Bᵀ, dB = Aᵀ g, each
 re-planned for its own shape), so model matmuls (``models.common``'s
-``gated_mlp`` / ``logits_matmul`` behind ``RunOptions.matmul_impl``) route
-through the kernels under training and serving alike.  Autotune v3 keys
-carry the planner-selected backend and its search covers backend, cutoff,
-and the ``morton`` schedule flag alongside the tile ladder, so the
-*measured* crossover can overrule the modeled one per device.
+``project``/``gated_mlp``/``logits_matmul``/``expert_project`` — MLPs, QKV
+and output projections, logits, MoE expert slabs) route through the
+kernels under training and serving alike whenever the ambient policy says
+so.  A forced variant (policy ``variants`` or call-site kwarg) keys the
+autotune replay lookup, so a pinned-classical run never replays tiles
+tuned for the Strassen entry.
 
 Tuning
 ------
@@ -70,13 +87,10 @@ power-of-two ladder around the analytic point, filtered by the costmodel
 envelope and each kernel's divisibility constraints) are persisted per
 ``(device_kind, op, shape_class, dtype, semantic flags)`` as JSON under
 ``REPRO_TUNE_DIR`` (default ``~/.cache/repro/autotune``) and overlaid at
-dispatch time.  Attention keys its causal/window kwargs and a derived
-decode marker, so masking regimes never share a measured optimum; tables
-are stamped with ``jax.__version__`` and a stamp mismatch (toolchain
-upgrade) reads as a cold cache.  The
-``REPRO_AUTOTUNE`` knob (mirrored by ``RunOptions.autotune``, resolved in
-``planner.resolve_run_options`` and pinned by the launchers at startup)
-selects among three modes:
+dispatch time.  The mode resolves through ``autotune.mode()``: an
+``autotune`` field set on the ambient policy (a scope or the RunOptions
+shim) wins, then the launcher's ``startup``/``set_mode`` pin, then
+``REPRO_AUTOTUNE``, else ``off``:
 
   * ``off``    — analytic plans only; the default for bare dispatch so
     benchmarks and tests see the pure planner unless they opt in;
@@ -94,22 +108,26 @@ Kernel modules (``bp_scan``, ``hbp_matmul``, ``strassen_matmul``,
 ``bi_transpose``, ``flash_attention``, ``bi_fft``) stay importable directly
 for tests and experiments; ``ref`` holds the pure-jnp oracles.
 """
-from repro.kernels import autotune, morton, planner, ref, registry
+from repro.kernels import autotune, morton, planner, policy, ref, registry
 from repro.kernels.bi_fft import bi_fft
 from repro.kernels.bi_transpose import bi_transpose
 from repro.kernels.bp_scan import bp_scan
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hbp_matmul import hbp_matmul
-from repro.kernels.registry import dispatch
+from repro.kernels.policy import ExecutionPolicy
+from repro.kernels.registry import dispatch, resolve
 from repro.kernels.strassen_matmul import strassen_matmul
 
 __all__ = [
     "autotune",
     "morton",
     "planner",
+    "policy",
     "ref",
     "registry",
+    "ExecutionPolicy",
     "dispatch",
+    "resolve",
     "bp_scan",
     "bi_transpose",
     "bi_fft",

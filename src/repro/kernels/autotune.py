@@ -109,9 +109,17 @@ def resolve_mode(value: Optional[str] = None) -> str:
 
 
 def mode() -> str:
-    """The active mode for bare dispatch: the process override if set, else
-    ``REPRO_AUTOTUNE``, else ``off`` (analytic plans only — benchmarks and
-    tests see the pure planner unless they opt in)."""
+    """The active mode for bare dispatch: an autotune field set on the
+    ambient :class:`~repro.kernels.policy.ExecutionPolicy` (a scoped
+    ``policy.apply(autotune=...)`` or the RunOptions compat shim) wins,
+    then the process override, then ``REPRO_AUTOTUNE``, else ``off``
+    (analytic plans only — benchmarks and tests see the pure planner
+    unless they opt in)."""
+    from repro.kernels import policy
+
+    pol = policy.current().autotune
+    if pol is not None:
+        return pol
     if _mode_override is not None:
         return _mode_override
     env = os.environ.get("REPRO_AUTOTUNE", "off")

@@ -34,8 +34,8 @@ The kernel carries a custom VJP (registered per static config): the
 recomputation-style flash backward — forward also emits the per-row LSE,
 backward recomputes P per block from (q, k, lse) and produces dq (KV-sweep
 grid) and dk/dv (q-sweep grid) without ever materializing an O(sq*sk)
-tensor.  ``impl="auto"`` attention therefore no longer needs to route
-around the kernel under autodiff.
+tensor.  A pallas-resolving execution policy therefore no longer needs to
+route attention around the kernel under autodiff.
 
 Supports GQA by passing pre-repeated or per-head-group K/V slices from the
 model adapter (the repeat is jnp-level, so KV-head gradients fold back via

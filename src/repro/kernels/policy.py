@@ -1,0 +1,311 @@
+"""Ambient execution policy: the one place backend/variant/autotune
+decisions live.
+
+The paper's scheduler is resource-oblivious because *policy* (where a task
+runs) is decided in one place, never threaded through the computation dag —
+the companion analyses (Cole–Ramachandran's RWS/false-sharing paper,
+"Bounding Cache Miss Costs … Under General Schedulers") likewise separate
+the schedule policy from the computation.  This module carries that
+division of labor into kernel dispatch: model code never names a backend;
+it asks ``registry.resolve``/``registry.dispatch``, which consult the
+*ambient* :class:`ExecutionPolicy`.
+
+An ``ExecutionPolicy`` is a frozen value object holding
+
+  * ``impl``        — per-op backend map (``{"attention": "pallas",
+    "*": "auto"}``); the ``"*"`` wildcard covers every op without its own
+    entry, and the implicit default is ``"auto"`` (ask the registry:
+    Pallas where it compiles natively, the jnp path elsewhere);
+  * ``variants``    — per-op variant-knob overrides merged into dispatch
+    under explicit call-site kwargs (e.g. ``{"matmul": {"backend":
+    "classical"}}``);
+  * ``autotune``    — measured-plan mode (``off`` | ``replay`` |
+    ``search``), consulted by ``repro.kernels.autotune.mode``;
+  * ``interpret``   — force (or forbid) Pallas interpret mode; ``None``
+    lets dispatch pick (interpret exactly where native compilation is
+    unsupported);
+  * ``strict_tiles``— raise instead of warning when tile overrides are
+    dropped on the oracle path;
+  * ``reason``      — free-text provenance for scoped overrides (the
+    ring-buffer pin records *why* it routes around the kernel).
+
+Policies layer on a context stack (a ``contextvars.ContextVar``, so scopes
+are thread- and async-isolated and trace-time safe under ``jax.jit`` —
+resolution happens while tracing, and a compiled function replays the
+decision baked at trace time):
+
+    base:   ambient()   — assembled from the environment
+                          (``REPRO_IMPL``, ``REPRO_STRICT_TILES``,
+                          ``REPRO_INTERPRET``; ``REPRO_AUTOTUNE`` is
+                          consulted by ``autotune.mode`` below the
+                          launcher's pin, see :func:`ambient`)
+    pinned: install()   — the launcher-resolved process policy
+                          (``--impl`` on serve/train/dryrun)
+    scoped: apply()/pin() — ``with``-blocks deriving from ``current()``
+
+``RunOptions.attention_impl`` / ``matmul_impl`` / ``autotune`` survive as a
+deprecated compat shim: :func:`from_run_options` turns the non-default
+fields into scope updates that ``models.base.Model`` applies around its
+public entry points, so the old knobs produce identical dispatch decisions
+to the equivalent explicit policy.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+from contextvars import ContextVar
+from dataclasses import dataclass, field, replace
+from types import MappingProxyType
+from typing import Callable, Mapping, Optional
+
+IMPLS = ("auto", "jnp", "ref", "pallas")
+_AUTOTUNE_MODES = ("off", "replay", "search")
+
+
+def _frozen_map(d: Optional[Mapping]) -> Mapping:
+    return MappingProxyType(dict(d or {}))
+
+
+@dataclass(frozen=True)
+class ExecutionPolicy:
+    """Every dispatch-time decision, as one immutable value.  Build
+    variations with :meth:`with_` (functional update) and activate them
+    with :func:`apply` / :func:`install`."""
+
+    impl: Mapping[str, str] = field(default_factory=dict)
+    variants: Mapping[str, Mapping] = field(default_factory=dict)
+    autotune: Optional[str] = None
+    interpret: Optional[bool] = None
+    strict_tiles: bool = False
+    reason: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "impl", _frozen_map(self.impl))
+        object.__setattr__(
+            self, "variants",
+            _frozen_map({k: _frozen_map(v) for k, v in dict(self.variants).items()}))
+        # op names validate against the registry (runtime import — the
+        # registry imports this module at load): a typo'd entry in a
+        # programmatic apply()/pin() would otherwise match nothing and
+        # silently leave the op on its ambient backend
+        from repro.kernels import registry
+
+        known = set(registry.names()) | {"*"}
+        for op, backend in self.impl.items():
+            if op not in known:
+                raise ValueError(f"unknown op {op!r} in impl map; "
+                                 f"registered: {sorted(known)}")
+            if backend not in IMPLS:
+                raise ValueError(
+                    f"unknown impl {backend!r} for op {op!r}; expected one of {IMPLS}")
+        for op in self.variants:
+            if op not in known:
+                raise ValueError(f"unknown op {op!r} in variants map; "
+                                 f"registered: {sorted(known)}")
+        if self.autotune is not None and self.autotune not in _AUTOTUNE_MODES:
+            raise ValueError(f"unknown autotune mode {self.autotune!r}; "
+                             f"expected one of {_AUTOTUNE_MODES}")
+
+    # -- queries -----------------------------------------------------------
+    def impl_for(self, op: str) -> str:
+        """The op's backend under this policy: its own entry, else the
+        ``"*"`` wildcard, else ``"auto"``."""
+        return self.impl.get(op, self.impl.get("*", "auto"))
+
+    def variant_for(self, op: str) -> dict:
+        """The op's variant-knob overrides (a fresh plain dict)."""
+        return dict(self.variants.get(op, {}))
+
+    # -- derivation --------------------------------------------------------
+    def with_(self, *, impl: Optional[Mapping] = None,
+              variants: Optional[Mapping] = None, **updates) -> "ExecutionPolicy":
+        """Functional update.  ``impl`` and ``variants`` entries MERGE over
+        the existing maps (an entry set to None deletes); scalar fields
+        replace."""
+        if impl is not None:
+            merged = {**self.impl, **dict(impl)}
+            updates["impl"] = {k: v for k, v in merged.items() if v is not None}
+        if variants is not None:
+            mv = dict(self.variants)
+            for op, knobs in dict(variants).items():
+                mv[op] = {**dict(mv.get(op, {})), **dict(knobs)}
+            updates["variants"] = mv
+        return replace(self, **updates)
+
+    def describe(self) -> str:
+        parts = [f"{op}={backend}" for op, backend in sorted(self.impl.items())]
+        for f_name in ("autotune", "interpret", "strict_tiles", "reason"):
+            v = getattr(self, f_name)
+            if v not in (None, False):
+                parts.append(f"{f_name}={v}")
+        return ",".join(parts) or "auto"
+
+
+# ---------------------------------------------------------------------------
+# the ambient default (environment assembly)
+# ---------------------------------------------------------------------------
+
+def parse_impl_arg(spec: str) -> dict[str, str]:
+    """The ``--impl`` / ``REPRO_IMPL`` grammar: ``op=backend[,op=backend]``
+    where op is a registered kernel name or ``*`` and backend one of
+    ``auto`` | ``jnp`` | ``ref`` | ``pallas``.  A bare backend with no
+    ``=`` is shorthand for the wildcard (``pallas`` == ``*=pallas``).
+    Unknown op names raise: a typo'd entry matching nothing would
+    otherwise silently leave every op on ``auto`` — the experiment's
+    'forced' numbers would be the default path."""
+    from repro.kernels import registry  # runtime-only: no import cycle
+
+    known = set(registry.names()) | {"*"}
+    out: dict[str, str] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            op, _, backend = part.partition("=")
+            op, backend = op.strip(), backend.strip()
+        else:
+            op, backend = "*", part
+        if not op:
+            raise ValueError(f"bad --impl entry {part!r}: empty op name")
+        if op not in known:
+            raise ValueError(f"bad --impl entry {part!r}: unknown op {op!r} "
+                             f"(registered: {sorted(known)})")
+        if backend not in IMPLS:
+            raise ValueError(f"bad --impl entry {part!r}: unknown backend "
+                             f"{backend!r} (expected one of {IMPLS})")
+        out[op] = backend
+    return out
+
+
+def _truthy(val: Optional[str]) -> bool:
+    return bool(val) and val.lower() not in ("0", "false", "no", "")
+
+
+# the assembled ambient, keyed on the env values it was read from so a
+# monkeypatched environment (tests) re-assembles without an explicit reset
+_AMBIENT_CACHE: dict[tuple, ExecutionPolicy] = {}
+
+
+def ambient() -> ExecutionPolicy:
+    """The base of the policy stack, assembled from the environment:
+    ``REPRO_IMPL`` (impl-map grammar), ``REPRO_STRICT_TILES``,
+    ``REPRO_INTERPRET``.  Memoized per env value.  ``REPRO_AUTOTUNE`` is
+    deliberately NOT baked in here: the ambient ``autotune`` field stays
+    None so a launcher's ``autotune.set_mode`` pin keeps outranking the
+    environment (``autotune.mode`` falls back to the env itself) — only an
+    explicit scope (``apply(autotune=...)`` / the RunOptions shim) sets the
+    field."""
+    key = tuple(os.environ.get(k) for k in (
+        "REPRO_IMPL", "REPRO_STRICT_TILES", "REPRO_INTERPRET"))
+    hit = _AMBIENT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    impl_env, strict_env, interp_env = key
+    pol = ExecutionPolicy(
+        impl=parse_impl_arg(impl_env) if impl_env else {},
+        strict_tiles=_truthy(strict_env),
+        interpret=True if _truthy(interp_env) else None,
+    )
+    _AMBIENT_CACHE.clear()  # env changed: old assemblies are dead weight
+    _AMBIENT_CACHE[key] = pol
+    return pol
+
+
+# ---------------------------------------------------------------------------
+# the stack
+# ---------------------------------------------------------------------------
+
+# scoped layers (ContextVar: thread/async isolated; default empty tuple)
+_STACK: ContextVar[tuple] = ContextVar("repro_policy_stack", default=())
+# launcher-pinned layer between ambient and the scopes
+_PROCESS: Optional[ExecutionPolicy] = None
+
+
+def current() -> ExecutionPolicy:
+    """The active policy: innermost ``apply`` scope, else the installed
+    process policy, else the environment-assembled ambient."""
+    stack = _STACK.get()
+    if stack:
+        return stack[-1]
+    if _PROCESS is not None:
+        return _PROCESS
+    return ambient()
+
+
+def install(pol: Optional[ExecutionPolicy]) -> None:
+    """Pin (or with None clear) the process-level policy — the launcher
+    hook behind ``--impl``.  Scoped ``apply`` blocks still layer on top."""
+    global _PROCESS
+    _PROCESS = pol
+
+
+@contextlib.contextmanager
+def apply(pol: Optional[ExecutionPolicy] = None, **updates):
+    """Push a policy scope.  With ``pol`` push exactly that policy; with
+    keyword updates derive from :func:`current` via :meth:`with_` (impl /
+    variants entries merge).  Restores the previous stack on exit — nesting
+    and exceptions unwind correctly, and scopes never leak across threads."""
+    base = current()
+    new = pol if pol is not None else base
+    if updates:
+        new = new.with_(**updates)
+    token = _STACK.set(_STACK.get() + (new,))
+    try:
+        yield new
+    finally:
+        _STACK.reset(token)
+
+
+def pin(op: str, backend: str, *, reason: str):
+    """Scoped single-op override with recorded provenance — the shape a
+    per-layer exception takes (e.g. hybrid's ring-buffer decode routes
+    attention to the jnp path because its cache slot order is a rotation).
+    ``reason`` is mandatory: a pin without a why is a hardcoded string with
+    extra steps."""
+    return apply(impl={op: backend}, reason=reason)
+
+
+def pin_if(cond, op: str, backend: str, *, reason: str):
+    """:func:`pin` when ``cond`` (a static Python bool), else a no-op scope —
+    for call sites whose exception only holds on some paths."""
+    return pin(op, backend, reason=reason) if cond else contextlib.nullcontext()
+
+
+# ---------------------------------------------------------------------------
+# RunOptions compat shim
+# ---------------------------------------------------------------------------
+
+def from_run_options(opts) -> Optional[dict]:
+    """Translate the deprecated ``RunOptions`` backend knobs
+    (``attention_impl`` / ``matmul_impl`` / ``autotune``) into ``apply``
+    updates, or None when every field is at its ambient-deferring default.
+    Models wrap their public entry points with :func:`bind` over this, so
+    the old knobs keep producing identical dispatch decisions."""
+    updates: dict = {}
+    impl = {}
+    for op, fld in (("attention", "attention_impl"), ("matmul", "matmul_impl")):
+        v = getattr(opts, fld, "auto")
+        if v != "auto":
+            impl[op] = v
+    if impl:
+        updates["impl"] = impl
+    tune = getattr(opts, "autotune", None)
+    if tune is not None:
+        updates["autotune"] = tune
+    return updates or None
+
+
+def bind(updates: Optional[dict], fn: Callable) -> Callable:
+    """Wrap ``fn`` so each call (including jit tracing, which happens at
+    Python level) runs under ``apply(**updates)``.  No-op for None."""
+    if not updates:
+        return fn
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        with apply(**updates):
+            return fn(*args, **kwargs)
+
+    return wrapper

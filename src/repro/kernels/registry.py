@@ -1,29 +1,49 @@
-"""Kernel registry: one cost-model-driven dispatch path for every op.
+"""Kernel registry: one policy-driven dispatch path for every op.
 
 Each op registers a ``KernelSpec`` — a Pallas implementation, the pure-jnp
 ``ref.py`` oracle, a planner hook that derives tile kwargs from the queried
-device (``repro.kernels.planner``), and a backend predicate saying when the
-Pallas path compiles natively.  ``dispatch(name, *args, **kwargs)`` replaces
-the four near-identical per-op wrappers the substrate used to carry in
-``ops.py``: it routes to the oracle on unsupported backends (so model code
-lowered on CPU sees the XLA-fused path, not the interpreter's loop nest),
-and otherwise calls the Pallas kernel with planner tiles merged under any
-explicit overrides.
+device (``repro.kernels.planner``), a backend predicate saying when the
+Pallas path compiles natively, and capability metadata (``has_vjp``, the
+``needs`` shape/dtype gate).  Two entry points consume it:
+
+``resolve(name, policy=None, **context)``
+    The single backend-resolution code path (it replaced the per-op
+    resolvers: ``resolve_matmul_impl``, the attention impl branch, and
+    ``default_impl``).  Looks the op up in the ambient
+    :class:`~repro.kernels.policy.ExecutionPolicy` (``"*"`` wildcard,
+    default ``"auto"``), expands ``auto`` via ``supported()``, and
+    downgrades a Pallas choice to ``jnp`` when capability metadata says the
+    kernel cannot serve the call — no registered backward under a possibly
+    differentiated caller, or a failing ``needs(**context)`` predicate.
+
+``dispatch(name, *args, impl=None, interpret=None, **kwargs)``
+    Invokes the resolved backend: the oracle for ``jnp``/``ref``, else the
+    Pallas kernel with planner-derived tiles, overlaid by any persisted
+    autotune measurement (``repro.kernels.autotune``), under the policy's
+    per-op variant overrides, under explicit call-site tile kwargs.  The
+    ``impl`` kwarg is the per-call escape hatch (benchmark arms, oracle
+    comparisons); everything else reads the policy.  Dispatch applies the
+    ``needs`` capability gate to policy-sourced resolutions, but it cannot
+    know whether the caller will differentiate — callers that might (the
+    model layer) must pre-resolve through :func:`resolve`, whose
+    ``has_vjp`` gate covers autodiff.
 
 Registered ops: ``scan``, ``matmul``, ``transpose``, ``attention``, ``fft``
 — the paper's trio of scans / matrix computations / FFT plus the BP
-online-softmax reduce.
+online-softmax reduce.  The same names also key the *simulator* side:
+``simulator_program(name, n)`` builds the op's access-trace HBP program
+from ``repro.core.algorithms``, so kernel dispatch and simulator cost
+cross-checks share one op namespace.
 """
 from __future__ import annotations
 
-import os
 import warnings
 from dataclasses import dataclass
 from typing import Callable, Optional, Tuple
 
 import jax
 
-from repro.kernels import planner, ref
+from repro.kernels import planner, policy, ref
 from repro.kernels.bi_fft import bi_fft
 from repro.kernels.bi_transpose import bi_transpose
 from repro.kernels.bp_scan import bp_scan
@@ -45,9 +65,14 @@ class KernelSpec:
     ``supported() -> bool`` says whether the Pallas path compiles natively
     on the current backend (it always *runs* via interpret mode).
     ``has_vjp`` marks ops whose Pallas implementation registers a custom
-    backward (safe under autodiff) — callers that keep a jnp fallback for
-    training (``models.common.attention``) consult it instead of assuming
-    the kernel is inference-only."""
+    backward (safe under autodiff) — :func:`resolve` downgrades the others
+    to the jnp path for model callers, which cannot tell a forward-only
+    call from a traced-for-grad one.  ``needs(**context) -> bool`` is the
+    shape/dtype capability gate: call-site context the kernel cannot serve
+    (e.g. attention with a custom softmax scale or a traced window) also
+    resolves to jnp.  ``simulator(n, mem, **kw)`` builds the op's
+    access-trace twin from ``repro.core.algorithms`` (None = no simulator
+    program for this op)."""
 
     name: str
     pallas: Callable
@@ -56,6 +81,8 @@ class KernelSpec:
     pallas_only: Tuple[str, ...] = ()
     supported: Callable[[], bool] = on_tpu
     has_vjp: bool = False
+    needs: Optional[Callable[..., bool]] = None
+    simulator: Optional[Callable] = None
 
 
 _REGISTRY: dict[str, KernelSpec] = {}
@@ -79,47 +106,100 @@ def names() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def default_impl(name: str) -> str:
-    """The backend the generic dispatch will pick: 'pallas' or 'ref'."""
-    return "pallas" if get(name).supported() else "ref"
+def resolve(name: str, pol: Optional[policy.ExecutionPolicy] = None,
+            *, differentiable: bool = True, **context) -> str:
+    """Resolve the op's backend under the (ambient) policy: ``"pallas"`` or
+    ``"jnp"``.  ``auto`` asks ``supported()``; a forced/auto ``pallas``
+    downgrades to ``jnp`` when the kernel lacks a registered backward
+    (``differentiable`` callers — the model-layer default) or its ``needs``
+    predicate rejects the call context.  ``ref`` resolves like ``jnp``:
+    both mean "not the Pallas kernel" at this layer."""
+    spec = get(name)
+    if pol is None:
+        pol = policy.current()
+    choice = pol.impl_for(name)
+    if choice == "auto":
+        choice = "pallas" if spec.supported() else "jnp"
+    elif choice == "ref":
+        choice = "jnp"
+    if choice == "pallas":
+        if differentiable and not spec.has_vjp:
+            choice = "jnp"
+        elif spec.needs is not None and not spec.needs(**context):
+            choice = "jnp"
+    return choice
 
 
-# ops already warned about dropped overrides (warn once per op, not per trace)
+# ops already warned about dropped overrides (warn once per op, not per
+# trace); reset_warnings() clears it between tests
 _WARNED_DROPPED: set[str] = set()
 
 
-def _check_dropped_overrides(name: str, overrides: dict) -> None:
+def reset_warnings() -> None:
+    """Test hook: clear the registry's and autotune's warn/log-once state so
+    one test's first-warning does not swallow the next test's."""
+    _WARNED_DROPPED.clear()
+    from repro.kernels import autotune
+
+    autotune._INTERP_LOGGED.clear()
+
+
+def _check_dropped_overrides(name: str, overrides: dict, *, strict: bool) -> None:
     """The oracle takes semantic kwargs only, so explicit tile overrides on
     the ref path never reach a kernel.  Silence here means an experiment can
     read 'fixed-tile' numbers that actually ran the un-tiled oracle — warn
-    once per op, or raise outright under ``REPRO_STRICT_TILES``."""
+    once per op, or raise outright under ``REPRO_STRICT_TILES`` / a
+    ``strict_tiles`` policy."""
     dropped = sorted(k for k, v in overrides.items() if v is not None)
     if not dropped:
         return
     msg = (f"dispatch({name!r}): tile override(s) {dropped} ignored on the "
-           "ref path (the oracle takes semantic kwargs only); pass "
-           "prefer_ref=False to exercise the tiles")
-    if os.environ.get("REPRO_STRICT_TILES"):
+           "ref path (the oracle takes semantic kwargs only); force "
+           "impl='pallas' to exercise the tiles")
+    if strict:
         raise ValueError(msg)
     if name not in _WARNED_DROPPED:
         _WARNED_DROPPED.add(name)
         warnings.warn(msg, stacklevel=3)
 
 
-def dispatch(name: str, *args, prefer_ref: Optional[bool] = None,
+def dispatch(name: str, *args, impl: Optional[str] = None,
              interpret: Optional[bool] = None, **kwargs):
-    """Generic dispatch: oracle when ``prefer_ref`` (default: whenever the
-    Pallas path would not compile natively), else the Pallas kernel with
-    planner-derived tiles, overlaid by any persisted autotune measurement
-    (``repro.kernels.autotune``), under any explicit tile overrides."""
+    """Generic dispatch under the ambient execution policy.  ``impl`` is
+    the per-call override (``"auto"`` | ``"jnp"``/``"ref"`` | ``"pallas"``);
+    None reads the policy's per-op map.  The oracle serves ``jnp``/``ref``;
+    ``pallas`` runs the kernel with planner tiles overlaid by autotune
+    measurements, the policy's per-op variant overrides, and explicit tile
+    kwargs (strongest last)."""
     spec = get(name)
+    pol = policy.current()
     native = spec.supported()
-    if prefer_ref is None:
-        prefer_ref = not native
-    overrides = {k: kwargs.pop(k) for k in list(kwargs) if k in spec.pallas_only}
-    if prefer_ref:
-        _check_dropped_overrides(name, overrides)
+    forced = impl is not None and impl != "auto"
+    if impl is None:
+        impl = pol.impl_for(name)
+    if impl == "auto":
+        impl = "pallas" if native else "ref"
+    # an unforced pallas (policy-sourced, or an explicit impl="auto") still
+    # honors the op's capability gate: call context the kernel cannot take
+    # (the ``needs`` predicate over the semantic kwargs) falls back to the
+    # oracle rather than erroring inside the kernel.  An explicit
+    # impl="pallas" skips this — the per-call escape hatch means "I know
+    # what the kernel takes"
+    if (not forced and impl == "pallas" and spec.needs is not None
+            and not spec.needs(**kwargs)):
+        impl = "ref"
+    explicit = {k: kwargs.pop(k) for k in list(kwargs) if k in spec.pallas_only}
+    explicit = {k: v for k, v in explicit.items() if v is not None}
+    pol_variants = {k: v for k, v in pol.variant_for(name).items()
+                    if k in spec.pallas_only}
+    if impl in ("ref", "jnp"):
+        # policy-scoped variants are overrides too: dropping them silently
+        # would let a 'forced-variant' experiment read oracle numbers
+        _check_dropped_overrides(name, {**pol_variants, **explicit},
+                                 strict=pol.strict_tiles)
         return spec.ref(*args, **kwargs)
+    overrides = dict(pol_variants)
+    overrides.update(explicit)
     tiles = dict(spec.plan(*args))
     from repro.kernels import autotune  # the measured layer above dispatch
 
@@ -127,13 +207,61 @@ def dispatch(name: str, *args, prefer_ref: Optional[bool] = None,
     # replay — key the lookup on them alongside the semantic kwargs; tile
     # overrides stay out (they win over the overlay below regardless)
     variant = {k: v for k, v in overrides.items()
-               if v is not None and k in autotune.variant_keys(name)}
+               if k in autotune.variant_keys(name)}
     tiles.update(autotune.overlay(name, args,
                                   search_kwargs={**kwargs, **variant}))
-    tiles.update({k: v for k, v in overrides.items() if v is not None})
+    tiles.update(overrides)
     if interpret is None:
-        interpret = not native
+        interpret = pol.interpret if pol.interpret is not None else not native
     return spec.pallas(*args, interpret=interpret, **kwargs, **tiles)
+
+
+# ---------------------------------------------------------------------------
+# simulator namespace (ROADMAP: one op namespace for kernels + simulator)
+# ---------------------------------------------------------------------------
+
+def simulator_program(name: str, n: int, mem=None, **kwargs):
+    """Build the op's access-trace HBP program (``repro.core.algorithms``)
+    under the same name the kernel dispatches as, so simulator cost
+    cross-checks and ``KernelSpec`` lookups share one namespace.  ``n`` is
+    the op's natural size (matrix edge for matmul/transpose, length for
+    scan/fft); allocates a fresh ``core.hbp.Memory`` unless given one.
+    Returns whatever the core builder returns (a program, or a program list
+    for multi-pass ops like the two-pass prefix scan)."""
+    spec = get(name)
+    if spec.simulator is None:
+        raise KeyError(f"kernel {name!r} has no registered simulator program; "
+                       f"ops with one: "
+                       f"{[s for s in names() if get(s).simulator is not None]}")
+    if mem is None:
+        from repro.core.hbp import Memory
+
+        mem = Memory()
+    return spec.simulator(n, mem, **kwargs)
+
+
+def _sim_scan(n, mem, **kw):
+    from repro.core import algorithms
+
+    return algorithms.prefix_sums_programs(n, mem, **kw)
+
+
+def _sim_matmul(n, mem, **kw):
+    from repro.core import algorithms
+
+    return algorithms.strassen_program(n, mem, **kw)
+
+
+def _sim_transpose(n, mem, **kw):
+    from repro.core import algorithms
+
+    return algorithms.MTBI(n, mem, **kw)
+
+
+def _sim_fft(n, mem, **kw):
+    from repro.core import algorithms
+
+    return algorithms.fft_program(n, mem, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +274,7 @@ register(KernelSpec(
     ref=ref.bp_scan_ref,
     plan=lambda x: planner.plan_scan(x.shape, x.dtype),
     pallas_only=("block",),
+    simulator=_sim_scan,
 ))
 
 register(KernelSpec(
@@ -159,6 +288,7 @@ register(KernelSpec(
                                           a.dtype),
     pallas_only=("bm", "bn", "bk", "morton", "backend", "cutoff"),
     has_vjp=True,
+    simulator=_sim_matmul,
 ))
 
 register(KernelSpec(
@@ -167,6 +297,7 @@ register(KernelSpec(
     ref=ref.transpose_ref,
     plan=lambda x: planner.plan_transpose(x.shape[0], x.shape[1], x.dtype),
     pallas_only=("bt", "morton"),
+    simulator=_sim_transpose,
 ))
 
 register(KernelSpec(
@@ -179,6 +310,11 @@ register(KernelSpec(
     # recomputation-style backward kernels (dq + dk/dv) registered as a
     # custom VJP in flash_attention — training no longer routes around it
     has_vjp=True,
+    # the kernel hard-codes the 1/sqrt(hd) scale, and its causal/window
+    # kwargs are static — a custom softmax scale or a traced (scan-carried)
+    # per-layer window cannot take the kernel route
+    needs=lambda softmax_scale=None, window=None, **_: (
+        softmax_scale is None and isinstance(window, (int, type(None)))),
 ))
 
 register(KernelSpec(
@@ -187,4 +323,5 @@ register(KernelSpec(
     ref=ref.fft_ref,
     plan=lambda x: planner.plan_fft(x.shape[-1]),
     pallas_only=("n1",),
+    simulator=_sim_fft,
 ))

@@ -212,9 +212,20 @@ def main() -> int:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--tag", default="", help="variant tag for perf experiments")
     ap.add_argument("--opts", default="", help="JSON RunOptions overrides")
+    ap.add_argument("--impl", default="",
+                    help="execution-policy impl map, op=backend[,op=backend] "
+                         "('*' wildcard) — exported as REPRO_IMPL so every "
+                         "lowered cell (including --all subprocesses) "
+                         "assembles the same ambient policy")
     ap.add_argument("--timeout", type=int, default=1800)
     ap.add_argument("--no-hlo", action="store_true")
     args = ap.parse_args()
+
+    if args.impl:
+        from repro.kernels import policy
+
+        policy.parse_impl_arg(args.impl)  # validate before fan-out
+        os.environ["REPRO_IMPL"] = args.impl
 
     OUT_DIR.mkdir(parents=True, exist_ok=True)
 

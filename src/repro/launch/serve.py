@@ -5,11 +5,21 @@ Serving model: requests arrive with prompts; the server packs up to
 decodes in lockstep with per-row stopping.  The KV cache is planned by the
 PWS planner (kv-heads over tp when divisible, else sequence-sharded).
 
-Both jitted steps route attention through ``RunOptions.attention_impl``
-("auto" = the kernel registry's choice): prefill as zero-offset
-self-attention, decode as a cached-attention call where the step position
-flows into the kernel as a traced ``q_offset`` (and, causally, the KV
-valid-length) — per-step positions never retrace either jit.
+Backend selection is the ambient ``repro.kernels.policy`` execution
+policy's call.  The ``--impl`` flag installs a process policy with the
+grammar
+
+    --impl op=backend[,op=backend]     e.g. --impl attention=pallas
+    --impl '*=pallas'                  wildcard: every op
+    --impl pallas                      bare backend == '*=backend'
+
+where op is a registered kernel name (``scan`` | ``matmul`` | ``transpose``
+| ``attention`` | ``fft``) or ``*``, and backend one of ``auto`` (registry
+decides) | ``jnp`` | ``pallas``.  Under a pallas attention policy, prefill
+dispatches as zero-offset self-attention and decode as a cached-attention
+call where the step position flows into the kernel as a traced ``q_offset``
+(and, causally, the KV valid-length) — per-step positions never retrace
+either jit.  ``REPRO_IMPL`` (same grammar) sets the policy without a flag.
 """
 from __future__ import annotations
 
@@ -113,25 +123,24 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--attention-impl", default="auto",
-                    choices=("auto", "jnp", "pallas"),
-                    help="attention backend for prefill AND decode (the "
-                         "kernel covers both since it learned q_offset/"
-                         "kv_len); 'auto' asks the kernel registry")
-    ap.add_argument("--matmul-impl", default="auto",
-                    choices=("auto", "jnp", "pallas"),
-                    help="backend for model matmuls (gated MLP + output "
-                         "logits): the registry's planner/autotune-tiled, "
-                         "classical-or-Strassen kernel vs the XLA einsum; "
-                         "'auto' asks the kernel registry")
+    ap.add_argument("--impl", default="",
+                    help="execution-policy impl map, op=backend[,op=backend] "
+                         "('*' wildcard; bare backend == '*=backend'): one "
+                         "flag for every kernel-backend decision — replaces "
+                         "--attention-impl/--matmul-impl (see module "
+                         "docstring for the grammar)")
     args = ap.parse_args()
+
+    if args.impl:
+        from repro.kernels import policy
+        policy.install(policy.ambient().with_(
+            impl=policy.parse_impl_arg(args.impl)))
 
     cfg = get_smoke_config(args.arch) if args.reduced else get_config(args.arch)
     from repro.launch.mesh import make_debug_mesh
     mesh = make_debug_mesh(tp=min(2, len(jax.devices())))
     server = Server(cfg, mesh, max_batch=args.batch, max_len=128,
-                    opts=RunOptions(attention_impl=args.attention_impl,
-                                    matmul_impl=args.matmul_impl))
+                    opts=RunOptions())
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(3, cfg.vocab_size, rng.integers(4, 20)).astype(np.int32),
                     max_new=args.max_new) for i in range(args.batch)]

@@ -4,9 +4,16 @@ Wires together: config -> model -> PWS planner shardings -> data pipeline ->
 fault-tolerant loop with async checkpointing.  Runs on any mesh (tests use a
 small host-device mesh; the production meshes come from mesh.py).
 
+Kernel backends resolve through the ambient ``repro.kernels.policy``
+execution policy; ``--impl op=backend[,op=backend]`` installs a process
+policy (op: a registered kernel name or ``*``; backend: ``auto`` | ``jnp``
+| ``pallas``; a bare backend means ``*=backend``) — it replaces the old
+``--attention-impl``/``--matmul-impl`` pair.  ``REPRO_IMPL`` (same grammar)
+works without a flag.
+
 CLI (CPU-scale example):
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --steps 50 \
-      --reduced --batch 8 --seq 256
+      --reduced --batch 8 --seq 256 --impl '*=pallas'
 """
 from __future__ import annotations
 
@@ -124,13 +131,17 @@ def main():
     ap.add_argument("--reduced", action="store_true", help="smoke-size config")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--save-every", type=int, default=0)
-    ap.add_argument("--attention-impl", default="auto",
-                    choices=("auto", "jnp", "pallas"))
-    ap.add_argument("--matmul-impl", default="auto",
-                    choices=("auto", "jnp", "pallas"),
-                    help="backend for model matmuls (gated MLP + logits): "
-                         "registry kernels (classical/Strassen) vs XLA einsum")
+    ap.add_argument("--impl", default="",
+                    help="execution-policy impl map, op=backend[,op=backend] "
+                         "('*' wildcard; bare backend == '*=backend') — "
+                         "replaces --attention-impl/--matmul-impl; see the "
+                         "module docstring for the grammar")
     args = ap.parse_args()
+
+    if args.impl:
+        from repro.kernels import policy
+        policy.install(policy.ambient().with_(
+            impl=policy.parse_impl_arg(args.impl)))
 
     cfg = get_smoke_config(args.arch) if args.reduced else get_config(args.arch)
     n = len(jax.devices())
@@ -138,8 +149,7 @@ def main():
     mesh = make_debug_mesh(n, tp=min(2, n))
     out = train(cfg, mesh=mesh, steps=args.steps,
                 data_cfg=DataConfig(global_batch=args.batch, seq_len=args.seq),
-                opts=RunOptions(attention_impl=args.attention_impl,
-                                matmul_impl=args.matmul_impl),
+                opts=RunOptions(),
                 ckpt_dir=args.ckpt_dir, save_every=args.save_every)
     print(f"final loss {out['losses'][-1]:.4f} (first {out['losses'][0]:.4f}) "
           f"in {out['wall_s']:.1f}s")

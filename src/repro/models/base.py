@@ -29,20 +29,20 @@ class RunOptions:
     # queried device by the kernel planner (repro.kernels.planner)
     q_block: Optional[int] = None
     kv_block: Optional[int] = None
-    # kernel backend for attention: "auto" consults the kernel registry
-    # (Pallas on TPU, jnp blockwise elsewhere); "jnp" | "pallas" force.
-    # The Pallas kernel carries a custom VJP and decode (q_offset/kv_len)
-    # support, so the knob applies uniformly to train, prefill, and decode
+    # DEPRECATED compat shim (use repro.kernels.policy / the launchers'
+    # --impl flag): non-default values are translated by Model.__init__ into
+    # a scoped ExecutionPolicy applied around loss/prefill/decode_step, so
+    # the old knobs produce identical dispatch decisions to the equivalent
+    # explicit policy.  "auto" defers to the ambient policy.
     attention_impl: str = "auto"
-    # kernel backend for model matmuls (gated MLP + output logits): "auto"
-    # consults the registry; "jnp" | "pallas" force.  The matmul kernel
-    # resolves the planner's classical/Strassen backend choice at dispatch
-    # and carries a custom VJP, so the knob applies to train and serve alike
+    # DEPRECATED compat shim twin for model matmuls (gated MLP, QKV/output
+    # projections, logits) — see attention_impl.
     matmul_impl: str = "auto"
     # measured-autotune mode for kernel dispatch: "off" | "replay" | "search";
     # None = resolved by the kernel planner (REPRO_AUTOTUNE, default "replay",
     # a no-op on a cold tile cache).  Launchers pin the resolved mode at
-    # startup via repro.kernels.autotune.startup.
+    # startup via repro.kernels.autotune.startup; a non-None value also joins
+    # the model's compat policy scope.
     autotune: Optional[str] = None
     # beyond-paper optimizations (off in the baseline)
     use_banded_local: bool = False  # banded sliding-window attention
@@ -58,15 +58,25 @@ class Model:
     """Family-agnostic interface used by train/serve/dryrun."""
 
     def __init__(self, cfg: ModelConfig, opts: Optional[RunOptions] = None):
-        from repro.kernels import planner  # kernels never import models
+        from repro.kernels import planner, policy  # kernels never import models
 
         self.cfg = cfg
+        raw = opts or RunOptions()
         # fill planner-owned tile fields (q_block/kv_block) from the queried
         # device and the model's real head geometry / activation dtype —
         # models stay resource-oblivious, the substrate decides
         self.opts = planner.resolve_run_options(
-            opts or RunOptions(), head_dim=cfg.head_dim_,
-            dtype=cfg.activation_dtype)
+            raw, head_dim=cfg.head_dim_, dtype=cfg.activation_dtype)
+        # deprecated RunOptions backend knobs -> a scoped ExecutionPolicy
+        # around the public entry points (tracing happens at Python level,
+        # so the scope governs every dispatch the trace performs).  Built
+        # from the *raw* options: a planner-filled autotune default must not
+        # masquerade as an explicit user choice
+        self._policy_updates = policy.from_run_options(raw)
+        if self._policy_updates is not None:
+            for name in ("loss", "prefill", "decode_step"):
+                setattr(self, name,
+                        policy.bind(self._policy_updates, getattr(self, name)))
 
     # -- construction ------------------------------------------------------
     def init(self, rng: jax.Array) -> Params:

@@ -377,10 +377,10 @@ def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
     ``q_pos[0] + i``, key j at ``k_pos[0] + j``) whenever they matter
     (causal or windowed masking).  Linear caches and fresh self-attention
     satisfy this; a *ring-buffer* cache (hybrid's windowed decode) does
-    not — its slot order is a rotation, so such callers must stay on the
-    jnp paths (they pass ``impl="jnp"`` explicitly).  For decode
-    (sq != sk) the kernel gets the query offset, and under causal masking
-    a ``kv_len`` so KV blocks past the attended prefix are skipped
+    not — its slot order is a rotation, so such callers scope a
+    ``policy.pin("attention", "jnp", reason=...)`` around the call.  For
+    decode (sq != sk) the kernel gets the query offset, and under causal
+    masking a ``kv_len`` so KV blocks past the attended prefix are skipped
     instead of computed-then-masked."""
     from repro.kernels import registry
 
@@ -405,7 +405,7 @@ def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
     out = registry.dispatch(
         "attention", fold(q), fold(k), fold(v), causal=causal,
         window=0 if window is None else int(window),
-        q_offset=q_offset, kv_len=kv_len, prefer_ref=False,
+        q_offset=q_offset, kv_len=kv_len, impl="pallas",
         q_block=qb, kv_block=kb,
     )
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
@@ -414,39 +414,30 @@ def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
 def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=None,
               use_banded_local: bool = False, block_threshold: int = 2048,
               q_block: int = 512, kv_block: int = 1024,
-              causal_block_skip: bool = False, impl: str = "jnp"):
+              causal_block_skip: bool = False):
     """Dispatch: dense for small/decode, blockwise for long, banded for local,
     triangular for causal long self-attention when block-skip is enabled.
 
-    ``impl`` picks the kernel backend: "jnp" (the default) keeps the
-    XLA paths, whose blockwise variant carries the flash custom VJP.
-    "auto" asks the registry (Pallas on TPU): the Pallas kernel now covers
-    cached decode (query offset + KV valid-length) and registers its own
-    recomputation backward, so both training and the serving prefill/decode
-    loop may route through it.  The kernel route assumes contiguous
-    position ranges (every model path satisfies this); cross-attention with
-    meaningless positions is fine too since it is non-causal/unwindowed."""
+    The backend is the ambient execution policy's call, resolved through
+    ``registry.resolve`` — no per-call knob.  "jnp" keeps the XLA paths,
+    whose blockwise variant carries the flash custom VJP; "pallas" routes
+    the registry's flash kernel, which covers cached decode (query offset +
+    KV valid-length) and registers its own recomputation backward, so both
+    training and the serving prefill/decode loop share one resolution.
+    ``resolve`` consults the kernel's capability metadata (``has_vjp``; the
+    ``needs`` gate rejects custom softmax scales and traced scan-carried
+    windows — the kernel's window/causal are static kwargs).  The kernel
+    route additionally assumes contiguous position ranges (every model path
+    satisfies this — the ring-buffer exception pins itself to jnp);
+    cross-attention with meaningless positions is fine too since it is
+    non-causal/unwindowed.  Banded-local is a model-level algorithm choice,
+    so it stays on its jnp path regardless of the resolved backend."""
+    from repro.kernels import registry
+
     sq, sk = q.shape[1], k.shape[1]
-    if impl == "auto":
-        from repro.kernels import registry
-
-        impl = "pallas" if registry.default_impl("attention") == "pallas" else "jnp"
-    if impl == "pallas":
-        from repro.kernels import registry
-
-        # an attention kernel without a registered backward may not serve
-        # this route: callers differentiate through it (training), and the
-        # model layer cannot tell a forward-only call from a traced-for-grad
-        # one — fall back to the jnp paths, whose blockwise variant carries
-        # the flash custom VJP
-        if not registry.get("attention").has_vjp:
-            impl = "jnp"
-    # custom softmax scales stay on the jnp paths (the kernel hard-codes
-    # 1/sqrt(hd)), as does banded-local; a traced per-layer window
-    # (scan-carried heterogeneity) must too — the kernel's window/causal are
-    # static kwargs
-    if (impl == "pallas" and softmax_scale is None
-            and not use_banded_local and isinstance(window, (int, type(None)))):
+    impl = registry.resolve("attention", softmax_scale=softmax_scale,
+                            window=window)
+    if impl == "pallas" and not use_banded_local:
         return _attention_via_kernel(q, k, v, q_pos, k_pos, causal=causal,
                                      window=window, q_block=q_block,
                                      kv_block=kv_block)
@@ -469,62 +460,58 @@ def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=
 # MLP / projections through the kernel registry
 # ---------------------------------------------------------------------------
 
-def resolve_matmul_impl(impl: str) -> str:
-    """The attention ``impl`` knob's twin for model matmuls: "auto" asks the
-    registry (Pallas on TPU, jnp elsewhere); a kernel without a registered
-    backward may not serve the route (the model layer cannot tell a
-    forward-only call from a traced-for-grad one) and falls back to jnp."""
-    if impl == "auto":
-        from repro.kernels import registry
+def project(x, w):
+    """x: (..., d) @ w: (d, f) -> (..., f), backend resolved by the ambient
+    execution policy.  The pallas route folds the leading dims and
+    dispatches the registry's matmul — planner-tiled, backend-selected
+    (classical/Strassen by the costmodel envelopes), autotune-overlaid,
+    differentiable via the kernel's custom VJP; jnp keeps the XLA einsum."""
+    from repro.kernels import registry
 
-        impl = "pallas" if registry.default_impl("matmul") == "pallas" else "jnp"
-    if impl == "pallas":
-        from repro.kernels import registry
-
-        if not registry.get("matmul").has_vjp:
-            impl = "jnp"
-    return impl
-
-
-def project(x, w, *, impl: str = "jnp"):
-    """x: (..., d) @ w: (d, f) -> (..., f).  ``impl="pallas"`` folds the
-    leading dims and dispatches the registry's matmul — planner-tiled,
-    backend-selected (classical/Strassen by the costmodel envelopes),
-    autotune-overlaid, differentiable via the kernel's custom VJP.  "jnp"
-    keeps the XLA einsum."""
-    if resolve_matmul_impl(impl) == "pallas":
-        from repro.kernels import registry
-
+    if registry.resolve("matmul") == "pallas":
         lead = x.shape[:-1]
         out = registry.dispatch("matmul", x.reshape(-1, x.shape[-1]), w,
-                                prefer_ref=False)
+                                impl="pallas")
         return out.reshape(*lead, w.shape[-1])
     return jnp.einsum("...d,df->...f", x, w)
 
 
-def gated_mlp(x, w_gate, w_up, w_down, *, impl: str = "jnp"):
-    """SwiGLU MLP; ``impl`` routes the three projections through the kernel
-    registry (see :func:`project`) with the jnp einsum fallback."""
-    g = project(x, w_gate, impl=impl)
-    u = project(x, w_up, impl=impl)
+def expert_project(h, w):
+    """Per-expert matmul h: (..., E, C, d) @ w: (E, d, f) -> (..., E, C, f)
+    (the MoE expert FFN products).  The pallas route vmaps :func:`project`
+    over the expert axis — pallas_call batching turns the expert dim into
+    one more grid dimension, so each expert's slab stays a registry-planned
+    kernel call; jnp keeps the batched einsum."""
+    from repro.kernels import registry
+
+    if registry.resolve("matmul") == "pallas":
+        return jax.vmap(project, in_axes=(-3, 0), out_axes=-3)(h, w)
+    return jnp.einsum("...ecd,edf->...ecf", h, w)
+
+
+def gated_mlp(x, w_gate, w_up, w_down):
+    """SwiGLU MLP; the three projections resolve their backend through the
+    ambient policy (see :func:`project`)."""
+    g = project(x, w_gate)
+    u = project(x, w_up)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     h = constrain(h, *(["batch"] + ["*"] * (h.ndim - 2) + ["ffn"]))
-    out = project(h, w_down, impl=impl)
+    out = project(h, w_down)
     if out.ndim == 3:
         return constrain(out, "batch", "seq", "*")
     return constrain(out, *(["batch"] + ["*"] * (out.ndim - 1)))
 
 
-def logits_matmul(h, embed_out, *, impl: str = "jnp"):
+def logits_matmul(h, embed_out):
     """Output-logits product h @ embed_outᵀ in fp32.  h: (..., d),
     embed_out: (V, d) -> (..., V).  The hottest serve-path matmul: the
     pallas route dispatches the registry's backend-selected kernel."""
-    if resolve_matmul_impl(impl) == "pallas":
-        from repro.kernels import registry
+    from repro.kernels import registry
 
+    if registry.resolve("matmul") == "pallas":
         lead = h.shape[:-1]
         out = registry.dispatch("matmul", h.reshape(-1, h.shape[-1]),
-                                embed_out.T, prefer_ref=False)
+                                embed_out.T, impl="pallas")
         return out.reshape(*lead, embed_out.shape[0]).astype(jnp.float32)
     return jnp.einsum("...d,vd->...v", h, embed_out).astype(jnp.float32)
 
@@ -533,13 +520,13 @@ def logits_matmul(h, embed_out, *, impl: str = "jnp"):
 # loss
 # ---------------------------------------------------------------------------
 
-def chunked_softmax_xent(hidden, embed_out, labels, *, chunk: int = 512,
-                         impl: str = "jnp"):
+def chunked_softmax_xent(hidden, embed_out, labels, *, chunk: int = 512):
     """Cross-entropy computed in sequence chunks so the (tokens, vocab) logits
     tensor never materializes in full (the paper's principle of bounding the
-    working set of a task; each chunk is one BP leaf).  ``impl`` routes the
-    per-chunk logits matmul through the kernel registry (the matmul kernel's
-    custom VJP keeps the route differentiable under the chunk remat).
+    working set of a task; each chunk is one BP leaf).  The per-chunk logits
+    matmul resolves its backend through the ambient policy (the matmul
+    kernel's custom VJP keeps the pallas route differentiable under the
+    chunk remat).
 
     hidden: (b, s, d);  embed_out: (V, d);  labels: (b, s) int32 with -100 pad.
     Returns mean loss (fp32 scalar).
@@ -556,7 +543,7 @@ def chunked_softmax_xent(hidden, embed_out, labels, *, chunk: int = 512,
     def per_chunk(carry, xs):
         h, lab = xs
         h = constrain(h, "batch", "*", "*")
-        logits = logits_matmul(h, embed_out, impl=impl)
+        logits = logits_matmul(h, embed_out)
         logits = constrain(logits, "batch", "*", "vocab")
         lse = jax.nn.logsumexp(logits, axis=-1)
         valid = lab >= 0

@@ -105,9 +105,11 @@ class DenseLM(Model):
         b, s, d = x.shape
         hd = cfg.head_dim_
         h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
-        q = jnp.einsum("bsd,dq->bsq", h, pl["wq"])
-        k = jnp.einsum("bsd,dq->bsq", h, pl["wk"])
-        v = jnp.einsum("bsd,dq->bsq", h, pl["wv"])
+        # QKV through the registry-resolving projection (ambient policy picks
+        # the backend; jnp resolves to the same einsum as before)
+        q = common.project(h, pl["wq"])
+        k = common.project(h, pl["wk"])
+        v = common.project(h, pl["wv"])
         if cfg.qkv_bias:
             q, k, v = q + pl["bq"], k + pl["bk"], v + pl["bv"]
         q = common.constrain(q.reshape(b, s, cfg.n_heads, hd), "batch", "*", "heads", "*")
@@ -135,12 +137,8 @@ class DenseLM(Model):
             q_block=self.opts.q_block, kv_block=self.opts.kv_block,
             # active whenever we attend over fresh k/v (train AND prefill)
             causal_block_skip=self.opts.causal_block_skip and s > 1,
-            # the Pallas kernel registers a recomputation backward and covers
-            # cached decode (q_offset/kv_len), so training and serving share
-            # one impl knob — no more routing around the kernel under autodiff
-            impl=self.opts.attention_impl,
         )
-        o = jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"])
+        o = common.project(o.reshape(b, s, cfg.q_dim), pl["wo"])
         return x + common.constrain(o, "batch", "seq", "*"), (k_cache, v_cache)
 
     def _ffn(self, pl, x):
@@ -151,11 +149,11 @@ class DenseLM(Model):
             y, aux = moe_ffn(
                 h.reshape(b * s, d), pl["router"], pl["e_gate"], pl["e_up"], pl["e_down"],
                 k=cfg.experts_per_token, capacity_factor=cfg.capacity_factor,
-                impl=self.opts.moe_dispatch, n_groups=self.opts.moe_groups,
+                dispatch=self.opts.moe_dispatch, n_groups=self.opts.moe_groups,
             )
             return x + y.reshape(b, s, d), aux
-        return x + common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"],
-                                    impl=self.opts.matmul_impl), jnp.zeros((), jnp.float32)
+        return x + common.gated_mlp(h, pl["w_gate"], pl["w_up"],
+                                    pl["w_down"]), jnp.zeros((), jnp.float32)
 
     # -- forward (training) --------------------------------------------------
     def _backbone(self, params, tokens, q_pos, k_pos, *, caches=None, write_at=None):
@@ -208,8 +206,7 @@ class DenseLM(Model):
         pos = jnp.arange(s, dtype=jnp.int32)
         x, _, aux = self._backbone(params, inputs, pos, pos)
         ce = common.chunked_softmax_xent(x, self._out_embed(params), labels,
-                                         chunk=self.opts.ce_chunk,
-                                         impl=self.opts.matmul_impl)
+                                         chunk=self.opts.ce_chunk)
         return ce + cfg.router_aux_weight * aux / max(cfg.n_layers, 1)
 
     # -- inference -----------------------------------------------------------
@@ -231,8 +228,7 @@ class DenseLM(Model):
         x, (kc, vc), _ = self._backbone(
             params, tokens, q_pos, k_pos, caches=(cache["k"], cache["v"]), write_at=0
         )
-        logits = common.logits_matmul(x[:, -1], self._out_embed(params),
-                                      impl=self.opts.matmul_impl)
+        logits = common.logits_matmul(x[:, -1], self._out_embed(params))
         return logits, {"k": kc, "v": vc}
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
@@ -244,6 +240,5 @@ class DenseLM(Model):
         x, (kc, vc), _ = self._backbone(
             params, tokens, q_pos, k_pos, caches=(cache["k"], cache["v"]), write_at=pos
         )
-        logits = common.logits_matmul(x[:, -1], self._out_embed(params),
-                                      impl=self.opts.matmul_impl)
+        logits = common.logits_matmul(x[:, -1], self._out_embed(params))
         return logits, {"k": kc, "v": vc}

@@ -64,9 +64,9 @@ class EncDecLM(Model):
         b, sq, _ = xq.shape
         sk = xkv.shape[1]
         hd = cfg.head_dim_
-        q = jnp.einsum("bsd,dq->bsq", xq, pa["wq"]).reshape(b, sq, cfg.n_heads, hd)
-        k = jnp.einsum("bsd,dq->bsq", xkv, pa["wk"]).reshape(b, sk, cfg.n_kv_heads, hd)
-        v = jnp.einsum("bsd,dq->bsq", xkv, pa["wv"]).reshape(b, sk, cfg.n_kv_heads, hd)
+        q = common.project(xq, pa["wq"]).reshape(b, sq, cfg.n_heads, hd)
+        k = common.project(xkv, pa["wk"]).reshape(b, sk, cfg.n_kv_heads, hd)
+        v = common.project(xkv, pa["wv"]).reshape(b, sk, cfg.n_kv_heads, hd)
         q = common.constrain(q, "batch", "*", "heads", "*")
         k = common.constrain(k, "batch", "*", "kv_heads", "*")
         v = common.constrain(v, "batch", "*", "kv_heads", "*")
@@ -88,11 +88,10 @@ class EncDecLM(Model):
             o = common.attention(q, k, v, pos, pos, causal=False,
                                  block_threshold=max(self.opts.q_block, self.opts.kv_block))
             x = x + common.constrain(
-                jnp.einsum("bsq,qd->bsd", o.reshape(x.shape[0], s, cfg.q_dim), pl["attn"]["wo"]),
+                common.project(o.reshape(x.shape[0], s, cfg.q_dim), pl["attn"]["wo"]),
                 "batch", "seq", "*")
             h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
-            x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"],
-                                 impl=self.opts.matmul_impl)
+            x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
             return x, None
 
         fn = maybe_remat(layer_fn, self.opts)
@@ -123,7 +122,7 @@ class EncDecLM(Model):
             o = common.attention(q, k, v, q_pos, k_pos, causal=True,
                                  block_threshold=max(self.opts.q_block, self.opts.kv_block))
             x = x + common.constrain(
-                jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["self_attn"]["wo"]),
+                common.project(o.reshape(b, s, cfg.q_dim), pl["self_attn"]["wo"]),
                 "batch", "seq", "*")
 
             # cross attention
@@ -131,7 +130,7 @@ class EncDecLM(Model):
             if cross_kv is not None:
                 xk, xv = xs[-2], xs[-1]
                 hd = cfg.head_dim_
-                xq = jnp.einsum("bsd,dq->bsq", h, pl["cross_attn"]["wq"]).reshape(
+                xq = common.project(h, pl["cross_attn"]["wq"]).reshape(
                     b, s, cfg.n_heads, hd)
                 cp = jnp.zeros((xk.shape[1],), jnp.int32)
                 o = common.attention_dense(xq, xk, xv, jnp.zeros((s,), jnp.int32), cp, causal=False)
@@ -142,12 +141,11 @@ class EncDecLM(Model):
                                      jnp.zeros((enc_out.shape[1],), jnp.int32), causal=False,
                                      block_threshold=max(self.opts.q_block, self.opts.kv_block))
             x = x + common.constrain(
-                jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["cross_attn"]["wo"]),
+                common.project(o.reshape(b, s, cfg.q_dim), pl["cross_attn"]["wo"]),
                 "batch", "seq", "*")
 
             h = common.rms_norm(x, pl["ln3"], cfg.norm_eps)
-            x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"],
-                                 impl=self.opts.matmul_impl)
+            x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
             ys = None if caches is None else (kc, vc)
             return x, ys
 
@@ -166,9 +164,9 @@ class EncDecLM(Model):
         hd = cfg.head_dim_
 
         def per_layer(pl):
-            k = jnp.einsum("bsd,dq->bsq", enc_out, pl["cross_attn"]["wk"]).reshape(
+            k = common.project(enc_out, pl["cross_attn"]["wk"]).reshape(
                 b, se, cfg.n_kv_heads, hd)
-            v = jnp.einsum("bsd,dq->bsq", enc_out, pl["cross_attn"]["wv"]).reshape(
+            v = common.project(enc_out, pl["cross_attn"]["wv"]).reshape(
                 b, se, cfg.n_kv_heads, hd)
             return k, v
 
@@ -182,8 +180,7 @@ class EncDecLM(Model):
         pos = jnp.arange(s, dtype=jnp.int32)
         enc_out = self._encoder(params, frames)
         x, _ = self._decoder(params, inputs, enc_out, pos, pos)
-        return common.chunked_softmax_xent(x, params["lm_head"], labels, chunk=self.opts.ce_chunk,
-                                         impl=self.opts.matmul_impl)
+        return common.chunked_softmax_xent(x, params["lm_head"], labels, chunk=self.opts.ce_chunk)
 
     def enc_len(self, seq_len: int) -> int:
         return max(int(seq_len * self.cfg.encoder_len_ratio), 16)
@@ -209,8 +206,7 @@ class EncDecLM(Model):
         x, (kc, vc) = self._decoder(params, tokens, None, q_pos, k_pos,
                                     caches=(cache["k"], cache["v"]), write_at=0,
                                     cross_kv=(xk, xv))
-        logits = common.logits_matmul(x[:, -1], params["lm_head"],
-                                      impl=self.opts.matmul_impl)
+        logits = common.logits_matmul(x[:, -1], params["lm_head"])
         return logits, {"k": kc, "v": vc, "xk": xk, "xv": xv}
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
@@ -220,8 +216,7 @@ class EncDecLM(Model):
         x, (kc, vc) = self._decoder(params, tokens, None, q_pos, k_pos,
                                     caches=(cache["k"], cache["v"]), write_at=pos,
                                     cross_kv=(cache["xk"], cache["xv"]))
-        logits = common.logits_matmul(x[:, -1], params["lm_head"],
-                                      impl=self.opts.matmul_impl)
+        logits = common.logits_matmul(x[:, -1], params["lm_head"])
         return logits, {"k": kc, "v": vc, "xk": cache["xk"], "xv": cache["xv"]}
 
     def batch_extras_specs(self, batch_size, seq_len):

@@ -147,8 +147,7 @@ class HybridLM(Model):
         out = (hseq * gate).astype(x.dtype)
         x = x + common.constrain(jnp.einsum("bsw,wd->bsd", out, pl["w_out"]), "batch", "seq", "*")
         h2 = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
-        x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"],
-                                 impl=self.opts.matmul_impl)
+        x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"])
         return x, new_state, new_conv
 
     def _attn_block(self, pl, x, q_pos, k_pos, kc=None, vc=None, write_at=None):
@@ -156,9 +155,9 @@ class HybridLM(Model):
         b, s, d = x.shape
         hd = cfg.head_dim_
         h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
-        q = jnp.einsum("bsd,dq->bsq", h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
-        k = jnp.einsum("bsd,dq->bsq", h, pl["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
-        v = jnp.einsum("bsd,dq->bsq", h, pl["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        q = common.project(h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
+        k = common.project(h, pl["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = common.project(h, pl["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
         q = common.constrain(q, "batch", "*", "heads", "*")
         k = common.constrain(k, "batch", "*", "kv_heads", "*")
         v = common.constrain(v, "batch", "*", "kv_heads", "*")
@@ -183,20 +182,30 @@ class HybridLM(Model):
                 k_att, v_att, kp = kc, vc, k_pos
         else:
             k_att, v_att, kp = k, v, k_pos
-        # impl stays "jnp": the ring-buffer cache's k_pos is non-monotonic
-        # (slot j holds position (write_at + j) mod W), which violates the
-        # Pallas kernel route's contiguous-positions contract — the kernel
-        # would causally mask the rolled-over half of the window
-        o = common.attention(q, k_att, v_att, q_pos, kp, causal=True,
-                             window=cfg.sliding_window, impl="jnp",
-                             use_banded_local=self.opts.use_banded_local and kc is None,
-                             block_threshold=max(self.opts.q_block, self.opts.kv_block))
+        # the ring-buffer decode cache is the one path that may not take the
+        # kernel route: slot j holds position (write_at + j) mod W — a
+        # *rotation*, violating the flash kernel's contiguous-positions
+        # contract (it would causally mask the rolled-over half of the
+        # window).  A scoped policy pin records the exception; every other
+        # path (train, prefill, linear-cache decode) follows the ambient
+        # policy like the rest of the model
+        from repro.kernels import policy  # lazy: kernels stay out of model import
+
+        ring = bool(kc is not None and s == 1
+                    and self.opts.windowed_decode_cache and cfg.sliding_window)
+        with policy.pin_if(ring, "attention", "jnp",
+                           reason="ring-buffer decode cache: slot order is a "
+                                  "rotation of positions, outside the flash "
+                                  "kernel's contiguous-positions contract"):
+            o = common.attention(q, k_att, v_att, q_pos, kp, causal=True,
+                                 window=cfg.sliding_window,
+                                 use_banded_local=self.opts.use_banded_local and kc is None,
+                                 block_threshold=max(self.opts.q_block, self.opts.kv_block))
         x = x + common.constrain(
-            jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"]),
+            common.project(o.reshape(b, s, cfg.q_dim), pl["wo"]),
             "batch", "seq", "*")
         h2 = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
-        x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"],
-                                 impl=self.opts.matmul_impl)
+        x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"])
         return x, (kc, vc)
 
     # -- forward ------------------------------------------------------------------
@@ -254,8 +263,7 @@ class HybridLM(Model):
         s = tokens.shape[1]
         pos = jnp.arange(s, dtype=jnp.int32)
         x, _ = self._backbone(params, inputs, pos, pos)
-        return common.chunked_softmax_xent(x, params["embed"], labels, chunk=self.opts.ce_chunk,
-                                         impl=self.opts.matmul_impl)
+        return common.chunked_softmax_xent(x, params["embed"], labels, chunk=self.opts.ce_chunk)
 
     # -- inference -------------------------------------------------------------------
     def _attn_cache_len(self, max_len):
@@ -294,8 +302,7 @@ class HybridLM(Model):
         k_pos = jnp.arange(max_len, dtype=jnp.int32)
         cache = self.init_cache(b, max_len)
         x, new_cache = self._backbone(params, tokens, q_pos, k_pos, cache=cache, write_at=0)
-        logits = common.logits_matmul(x[:, -1], params["embed"],
-                                      impl=self.opts.matmul_impl)
+        logits = common.logits_matmul(x[:, -1], params["embed"])
         return logits, new_cache
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
@@ -313,6 +320,5 @@ class HybridLM(Model):
             write_at = pos
         x, new_cache = self._backbone(params, tokens, q_pos, k_pos, cache=cache,
                                       write_at=write_at)
-        logits = common.logits_matmul(x[:, -1], params["embed"],
-                                      impl=self.opts.matmul_impl)
+        logits = common.logits_matmul(x[:, -1], params["embed"])
         return logits, new_cache

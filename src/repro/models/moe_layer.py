@@ -48,11 +48,15 @@ def router(x, w_router, k: int):
 
 
 def expert_ffn(h, e_gate, e_up, e_down):
-    """h: (E, C, d); expert weights (E, d, f)/(E, f, d)."""
-    g = jnp.einsum("ecd,edf->ecf", h, e_gate)
-    u = jnp.einsum("ecd,edf->ecf", h, e_up)
+    """h: (E, C, d); expert weights (E, d, f)/(E, f, d).  The per-expert
+    matmuls resolve their backend through the ambient policy
+    (``common.expert_project``: the kernel registry vmapped over experts)."""
+    from repro.models import common
+
+    g = common.expert_project(h, e_gate)
+    u = common.expert_project(h, e_up)
     a = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
-    return jnp.einsum("ecf,efd->ecd", a, e_down)
+    return common.expert_project(a, e_down)
 
 
 def moe_ffn_sort(x, w_router, e_gate, e_up, e_down, *, k: int, capacity_factor: float,
@@ -116,10 +120,14 @@ def moe_ffn_sort(x, w_router, e_gate, e_up, e_down, *, k: int, capacity_factor: 
     h = h.reshape(g, n_experts, cap, d)
     h = constrain(h, "batch", "experts", "*", "*")
 
-    gq = jnp.einsum("gecd,edf->gecf", h, e_gate)
-    up = jnp.einsum("gecd,edf->gecf", h, e_up)
+    # expert FFN products through the registry-resolving per-expert matmul
+    # (ROADMAP PR-4 follow-on: MoE expert matmuls on the kernel substrate)
+    from repro.models import common
+
+    gq = common.expert_project(h, e_gate)
+    up = common.expert_project(h, e_up)
     act = jax.nn.silu(gq.astype(jnp.float32)).astype(h.dtype) * up
-    y_e = jnp.einsum("gecf,efd->gecd", act, e_down)
+    y_e = common.expert_project(act, e_down)
     y_e = constrain(y_e, "batch", "experts", "*", "*")
 
     y_flat = jnp.concatenate(
@@ -152,8 +160,11 @@ def moe_ffn_onehot(x, w_router, e_gate, e_up, e_down, *, k: int, capacity_factor
 
 
 def moe_ffn(x, w_router, e_gate, e_up, e_down, *, k: int, capacity_factor: float,
-            impl: str = "sort", n_groups: int = 1):
-    if impl == "sort":
+            dispatch: str = "sort", n_groups: int = 1):
+    """``dispatch`` selects the token-dispatch algorithm ("sort" production
+    path | "onehot" reference) — an algorithm choice, not a kernel backend;
+    backends resolve through the ambient execution policy inside."""
+    if dispatch == "sort":
         return moe_ffn_sort(x, w_router, e_gate, e_up, e_down, k=k,
                             capacity_factor=capacity_factor, n_groups=n_groups)
     return moe_ffn_onehot(x, w_router, e_gate, e_up, e_down, k=k,

@@ -195,8 +195,7 @@ class SSMLM(Model):
         tokens, labels = batch["tokens"], batch["labels"]
         inputs = right_shift(tokens)
         x, _ = self._backbone(params, inputs)
-        return common.chunked_softmax_xent(x, params["embed"], labels, chunk=self.opts.ce_chunk,
-                                         impl=self.opts.matmul_impl)
+        return common.chunked_softmax_xent(x, params["embed"], labels, chunk=self.opts.ce_chunk)
 
     # -- inference: state is O(1) in sequence length (the SSM advantage) -----
     def init_cache(self, batch_size, max_len):
@@ -215,12 +214,10 @@ class SSMLM(Model):
         b, s = tokens.shape
         cache = self.init_cache(b, max_len)
         x, new_cache = self._backbone(params, tokens, cache=cache)
-        logits = common.logits_matmul(x[:, -1], params["embed"],
-                                      impl=self.opts.matmul_impl)
+        logits = common.logits_matmul(x[:, -1], params["embed"])
         return logits, new_cache
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
         x, new_cache = self._backbone(params, tokens, cache=cache, single_step=True)
-        logits = common.logits_matmul(x[:, -1], params["embed"],
-                                      impl=self.opts.matmul_impl)
+        logits = common.logits_matmul(x[:, -1], params["embed"])
         return logits, new_cache

@@ -72,9 +72,9 @@ class VisionLM(Model):
         b, s, _ = x.shape
         hd = cfg.head_dim_
         h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
-        q = jnp.einsum("bsd,dq->bsq", h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
-        k = jnp.einsum("bsd,dq->bsq", h, pl["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
-        v = jnp.einsum("bsd,dq->bsq", h, pl["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        q = common.project(h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
+        k = common.project(h, pl["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = common.project(h, pl["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
         q = common.constrain(q, "batch", "*", "heads", "*")
         k = common.constrain(k, "batch", "*", "kv_heads", "*")
         v = common.constrain(v, "batch", "*", "kv_heads", "*")
@@ -86,12 +86,11 @@ class VisionLM(Model):
             k, v = kc, vc
         o = common.attention(q, k, v, q_pos, k_pos, causal=True,
                              block_threshold=max(self.opts.q_block, self.opts.kv_block))
-        o = common.constrain(jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"]),
+        o = common.constrain(common.project(o.reshape(b, s, cfg.q_dim), pl["wo"]),
                              "batch", "seq", "*")
         x = x + o
         h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
-        x = x + common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"],
-                                 impl=self.opts.matmul_impl)
+        x = x + common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"])
         return x, (kc, vc)
 
     def _cross_attn_block(self, pl, x, img_k, img_v):
@@ -100,18 +99,17 @@ class VisionLM(Model):
         b, s, _ = x.shape
         hd = cfg.head_dim_
         h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
-        q = jnp.einsum("bsd,dq->bsq", h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
+        q = common.project(h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
         q = common.rms_norm(q, pl["q_norm"], cfg.norm_eps)
         n_img = img_k.shape[1]
         q_pos = jnp.zeros((s,), jnp.int32)
         k_pos = jnp.zeros((n_img,), jnp.int32)
         o = common.attention_dense(q, img_k, img_v, q_pos, k_pos, causal=False)
-        o = common.constrain(jnp.einsum("bsq,qd->bsd", o.reshape(b, s, cfg.q_dim), pl["wo"]),
+        o = common.constrain(common.project(o.reshape(b, s, cfg.q_dim), pl["wo"]),
                              "batch", "seq", "*")
         x = x + jnp.tanh(pl["xgate_attn"].astype(jnp.float32)).astype(x.dtype) * o
         h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
-        m = common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"],
-                                 impl=self.opts.matmul_impl)
+        m = common.gated_mlp(h, pl["w_gate"], pl["w_up"], pl["w_down"])
         return x + jnp.tanh(pl["xgate_ffn"].astype(jnp.float32)).astype(x.dtype) * m
 
     def _image_kv(self, pl_cross, img):
@@ -119,8 +117,8 @@ class VisionLM(Model):
         cfg = self.cfg
         b, n_img, _ = img.shape
         hd = cfg.head_dim_
-        k = jnp.einsum("bnd,dq->bnq", img, pl_cross["wk"]).reshape(b, n_img, cfg.n_kv_heads, hd)
-        v = jnp.einsum("bnd,dq->bnq", img, pl_cross["wv"]).reshape(b, n_img, cfg.n_kv_heads, hd)
+        k = common.project(img, pl_cross["wk"]).reshape(b, n_img, cfg.n_kv_heads, hd)
+        v = common.project(img, pl_cross["wv"]).reshape(b, n_img, cfg.n_kv_heads, hd)
         k = common.rms_norm(k, pl_cross["k_norm"], cfg.norm_eps)
         return k, v
 
@@ -172,8 +170,7 @@ class VisionLM(Model):
         s = tokens.shape[1]
         pos = jnp.arange(s, dtype=jnp.int32)
         x, _ = self._backbone(params, inputs, img, pos, pos)
-        return common.chunked_softmax_xent(x, params["lm_head"], labels, chunk=self.opts.ce_chunk,
-                                         impl=self.opts.matmul_impl)
+        return common.chunked_softmax_xent(x, params["lm_head"], labels, chunk=self.opts.ce_chunk)
 
     # -- inference ---------------------------------------------------------------
     def init_cache(self, batch_size, max_len):
@@ -204,8 +201,7 @@ class VisionLM(Model):
             params, tokens, None, q_pos, k_pos,
             caches=(cache["k"], cache["v"]), write_at=0, img_kv=(img_k, img_v),
         )
-        logits = common.logits_matmul(x[:, -1], params["lm_head"],
-                                      impl=self.opts.matmul_impl)
+        logits = common.logits_matmul(x[:, -1], params["lm_head"])
         return logits, {"k": kc, "v": vc, "img_k": img_k, "img_v": img_v}
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
@@ -218,8 +214,7 @@ class VisionLM(Model):
             caches=(cache["k"], cache["v"]), write_at=pos,
             img_kv=(cache["img_k"], cache["img_v"]),
         )
-        logits = common.logits_matmul(x[:, -1], params["lm_head"],
-                                      impl=self.opts.matmul_impl)
+        logits = common.logits_matmul(x[:, -1], params["lm_head"])
         return logits, {"k": kc, "v": vc, "img_k": cache["img_k"], "img_v": cache["img_v"]}
 
     def batch_extras_specs(self, batch_size, seq_len):

@@ -9,5 +9,18 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _reset_warn_once():
+    """Warn/log-once registries (dispatch's dropped-override warning, the
+    autotune interpolation log) must not leak across tests: a test that
+    asserts 'warns once' would otherwise pass or fail depending on which
+    test dispatched first."""
+    from repro.kernels import registry
+
+    registry.reset_warnings()
+    yield

@@ -171,8 +171,8 @@ def test_replay_cold_cache_is_noop(tune_dir):
     x = jax.random.normal(jax.random.key(0), (2, 256))
     with autotune.mode_scope("replay"):
         assert autotune.overlay("scan", (x,)) == {}
-        got = registry.dispatch("scan", x, prefer_ref=False)
-    want = registry.dispatch("scan", x, prefer_ref=True)
+        got = registry.dispatch("scan", x, impl="pallas")
+    want = registry.dispatch("scan", x, impl="ref")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
     assert not list(tune_dir.iterdir())  # replay never writes
@@ -193,10 +193,10 @@ def test_corrupt_or_foreign_tables_are_ignored(tune_dir, payload):
     assert autotune.load_table() == {}  # never raises
     x = jax.random.normal(jax.random.key(0), (2, 256))
     with autotune.mode_scope("replay"):
-        got = registry.dispatch("scan", x, prefer_ref=False)  # still runs
+        got = registry.dispatch("scan", x, impl="pallas")  # still runs
     np.testing.assert_allclose(
         np.asarray(got),
-        np.asarray(registry.dispatch("scan", x, prefer_ref=True)),
+        np.asarray(registry.dispatch("scan", x, impl="ref")),
         rtol=1e-4, atol=1e-4)
 
 
@@ -225,26 +225,26 @@ def test_dispatch_replays_tuned_plan(tune_dir):
     autotune.save_table()
     with autotune.mode_scope("replay"):
         assert autotune.overlay("scan", (x,)) == {"block": 64}
-        got = registry.dispatch("scan", x, prefer_ref=False)
+        got = registry.dispatch("scan", x, impl="pallas")
         np.testing.assert_allclose(
             np.asarray(got),
-            np.asarray(registry.dispatch("scan", x, prefer_ref=True)),
+            np.asarray(registry.dispatch("scan", x, impl="ref")),
             rtol=1e-4, atol=1e-4)
         # an explicit non-divisor override must still reach the kernel
         # (and trip its divisibility assert) — the tuned plan does not mask it
         with pytest.raises(AssertionError):
-            registry.dispatch("scan", x, prefer_ref=False, block=60)
+            registry.dispatch("scan", x, impl="pallas", block=60)
 
 
 def test_search_mode_fills_table_from_dispatch(tune_dir):
     x = jax.random.normal(jax.random.key(0), (2, 128))
     with autotune.mode_scope("search"):
-        registry.dispatch("scan", x, prefer_ref=False)
+        registry.dispatch("scan", x, impl="pallas")
     assert autotune.lookup("scan", x) is not None  # miss triggered a search
     # under jit the args are tracers: search must degrade to replay, not time
     y = jax.random.normal(jax.random.key(1), (2, 64))
     with autotune.mode_scope("search"):
-        jax.jit(lambda t: registry.dispatch("scan", t, prefer_ref=False))(y)
+        jax.jit(lambda t: registry.dispatch("scan", t, impl="pallas"))(y)
     assert autotune.lookup("scan", y) is None
 
 
@@ -330,11 +330,11 @@ def test_ref_path_warns_once_on_dropped_tile_overrides(monkeypatch):
     monkeypatch.setattr(registry, "_WARNED_DROPPED", set())
     x = jax.random.normal(jax.random.key(0), (2, 256))
     with pytest.warns(UserWarning, match="ignored on the ref path"):
-        registry.dispatch("scan", x, prefer_ref=True, block=64)
+        registry.dispatch("scan", x, impl="ref", block=64)
     with warnings.catch_warnings():
         warnings.simplefilter("error")  # second call: warned once already
-        registry.dispatch("scan", x, prefer_ref=True, block=64)
-        registry.dispatch("scan", x, prefer_ref=True)  # no tiles: never warns
+        registry.dispatch("scan", x, impl="ref", block=64)
+        registry.dispatch("scan", x, impl="ref")  # no tiles: never warns
     monkeypatch.setenv("REPRO_STRICT_TILES", "1")
     with pytest.raises(ValueError, match="ignored on the ref path"):
-        registry.dispatch("scan", x, prefer_ref=True, block=64)
+        registry.dispatch("scan", x, impl="ref", block=64)

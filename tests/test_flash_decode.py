@@ -3,10 +3,10 @@
 Covers the two attention ROADMAP items landed together: cached decode on the
 Pallas kernel (``q_offset`` / ``kv_len``, static grid shrink and traced
 no-recompile paths, ragged shapes, fully-masked rows) and the custom VJP
-(recomputation backward kernels), plus the model-layer routing — with the
-registry forced to "pallas", ``models.common.attention(..., impl="auto")``
-reaches the kernel in interpret mode for decode *and* under autodiff, with
-value and gradient parity against the jnp paths.
+(recomputation backward kernels), plus the model-layer routing — under a
+``policy.apply(impl={"attention": "pallas"})`` scope,
+``models.common.attention`` reaches the kernel in interpret mode for decode
+*and* under autodiff, with value and gradient parity against the jnp paths.
 """
 import dataclasses
 
@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref, registry
+from repro.kernels import policy, ref, registry
 from repro.kernels.flash_attention import flash_attention
 from repro.models import common
 
@@ -163,9 +163,10 @@ def test_registry_attention_has_backward_entry():
 
 @pytest.fixture
 def force_pallas(monkeypatch):
-    """Force 'auto' to resolve to the Pallas path (as on TPU) while keeping
-    supported()=False, so dispatch runs the kernel in interpret mode; wrap
-    the spec's pallas hook to count that the kernel really ran."""
+    """Scope an execution policy forcing attention onto the Pallas path (as
+    'auto' resolves on TPU) while supported() stays False, so dispatch runs
+    the kernel in interpret mode; wrap the spec's pallas hook to count that
+    the kernel really ran."""
     calls = []
     spec = registry.get("attention")
 
@@ -175,10 +176,8 @@ def force_pallas(monkeypatch):
 
     monkeypatch.setitem(registry._REGISTRY, "attention",
                         dataclasses.replace(spec, pallas=counting_pallas))
-    monkeypatch.setattr(registry, "default_impl",
-                        lambda name: "pallas" if name == "attention"
-                        else "ref")
-    return calls
+    with policy.apply(impl={"attention": "pallas"}):
+        yield calls
 
 
 def _model_qkv(b, sq, sk, h, kvh, hd, seed=0):
@@ -188,38 +187,40 @@ def _model_qkv(b, sq, sk, h, kvh, hd, seed=0):
             jax.random.normal(keys[2], (b, sk, kvh, hd)))
 
 
-def test_attention_auto_routes_decode_through_kernel(force_pallas):
-    """impl='auto': a decode call (sq=1 over a 256-slot cache, GQA heads)
-    runs the registry's Pallas kernel in interpret mode and matches the jnp
-    (dense) decode path."""
+def test_attention_policy_routes_decode_through_kernel(force_pallas):
+    """Under the pallas policy scope, a decode call (sq=1 over a 256-slot
+    cache, GQA heads) runs the registry's Pallas kernel in interpret mode
+    and matches the jnp (dense) decode path (a nested jnp scope)."""
     q, k, v = _model_qkv(2, 1, 256, 4, 2, 32)
     pos = jnp.full((1,), 100, jnp.int32)
     kp = jnp.arange(256, dtype=jnp.int32)
-    got = common.attention(q, k, v, pos, kp, causal=True, impl="auto",
+    got = common.attention(q, k, v, pos, kp, causal=True,
                            q_block=64, kv_block=64)
     assert force_pallas, "decode did not reach the Pallas kernel"
-    want = common.attention(q, k, v, pos, kp, causal=True, impl="jnp",
-                            q_block=64, kv_block=64)
+    with policy.apply(impl={"attention": "jnp"}):
+        want = common.attention(q, k, v, pos, kp, causal=True,
+                                q_block=64, kv_block=64)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
 
 
-def test_attention_auto_routes_autodiff_through_kernel(force_pallas):
-    """impl='auto' under jax.grad: the kernel's custom VJP serves the
+def test_attention_policy_routes_autodiff_through_kernel(force_pallas):
+    """The pallas policy under jax.grad: the kernel's custom VJP serves the
     backward (no routing around it), with gradient parity against the jnp
     path's flash VJP."""
     q, k, v = _model_qkv(2, 128, 128, 4, 2, 32)
     pos = jnp.arange(128, dtype=jnp.int32)
 
-    def loss(q, k, v, impl):
-        o = common.attention(q, k, v, pos, pos, causal=True, impl=impl,
+    def loss(q, k, v):
+        o = common.attention(q, k, v, pos, pos, causal=True,
                              q_block=64, kv_block=64)
         return jnp.sum(o * o)
 
-    got_val = loss(q, k, v, "auto")
-    got = jax.grad(loss, argnums=(0, 1, 2))(q, k, v, "auto")
+    got_val = loss(q, k, v)
+    got = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
     assert force_pallas, "autodiff call did not reach the Pallas kernel"
-    want_val = loss(q, k, v, "jnp")
-    want = jax.grad(loss, argnums=(0, 1, 2))(q, k, v, "jnp")
+    with policy.apply(impl={"attention": "jnp"}):
+        want_val = loss(q, k, v)
+        want = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
     np.testing.assert_allclose(float(got_val), float(want_val), rtol=1e-5)
     for g, w, name in zip(got, want, "qkv"):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-4,

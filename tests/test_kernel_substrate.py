@@ -174,27 +174,36 @@ def test_registry_pallas_matches_oracle(name):
     """The generic dispatch path: planner-tiled Pallas (interpret) vs the
     ref.py oracle, for every registered op."""
     args, kwargs = _case(name)
-    got = registry.dispatch(name, *args, prefer_ref=False, **kwargs)
-    want = registry.dispatch(name, *args, prefer_ref=True, **kwargs)
+    got = registry.dispatch(name, *args, impl="pallas", **kwargs)
+    want = registry.dispatch(name, *args, impl="ref", **kwargs)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-3, atol=2e-3)
 
 
 def test_registry_tile_overrides_win():
     x = jax.random.normal(jax.random.key(0), (2, 256))
-    got = registry.dispatch("scan", x, prefer_ref=False, block=64)
+    got = registry.dispatch("scan", x, impl="pallas", block=64)
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(registry.dispatch("scan", x)),
                                rtol=1e-4, atol=1e-4)
     # the override must actually reach the kernel: a non-divisor block trips
     # bp_scan's divisibility assert (a silently dropped override would not)
     with pytest.raises(AssertionError):
-        registry.dispatch("scan", x, prefer_ref=False, block=60)
+        registry.dispatch("scan", x, impl="pallas", block=60)
 
 
-def test_registry_default_impl_matches_backend():
-    want = "pallas" if jax.default_backend() == "tpu" else "ref"
-    assert registry.default_impl("attention") == want
+def test_registry_resolve_matches_backend():
+    """The generic resolver's 'auto' expansion follows supported(); ops
+    without a registered backward never resolve pallas for (default)
+    differentiable callers, even when forced."""
+    from repro.kernels import policy
+
+    want = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert registry.resolve("attention") == want
+    with policy.apply(impl={"*": "pallas"}):
+        assert registry.resolve("attention") == "pallas"
+        assert registry.resolve("scan") == "jnp"  # no VJP: model callers -> jnp
+        assert registry.resolve("scan", differentiable=False) == "pallas"
 
 
 def test_fft_nonsquare_split_and_odd_rows():
@@ -203,13 +212,13 @@ def test_fft_nonsquare_split_and_odd_rows():
     x = (jax.random.normal(jax.random.key(0), (3, 128))
          + 1j * jax.random.normal(jax.random.key(1), (3, 128))).astype(jnp.complex64)
     for n1 in (1, 4, 8, 128, 100):  # 100 does not divide 128 -> snaps down
-        got = registry.dispatch("fft", x, prefer_ref=False, n1=n1)
+        got = registry.dispatch("fft", x, impl="pallas", n1=n1)
         np.testing.assert_allclose(np.asarray(got),
                                    np.asarray(jnp.fft.fft(x, axis=-1)),
                                    rtol=2e-3, atol=2e-3)
     with pytest.raises(ValueError, match="power-of-two"):
         registry.dispatch("fft", jnp.zeros((2, 96), jnp.complex64),
-                          prefer_ref=False)
+                          impl="pallas")
 
 
 def test_flash_attention_morton_grid_matches_rowmajor_shapes():

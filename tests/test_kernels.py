@@ -21,7 +21,7 @@ def tol(dtype):
 @pytest.mark.parametrize("rows,n,block", [(1, 256, 64), (4, 1024, 128), (3, 512, 512)])
 def test_bp_scan_sweep(rows, n, block, dtype):
     x = jax.random.normal(jax.random.key(n), (rows, n), jnp.float32).astype(dtype)
-    out = registry.dispatch("scan", x, prefer_ref=False, block=block)
+    out = registry.dispatch("scan", x, impl="pallas", block=block)
     want = ref.bp_scan_ref(x)
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
                                **tol(dtype))
@@ -33,7 +33,7 @@ def test_bp_scan_sweep(rows, n, block, dtype):
 def test_hbp_matmul_sweep(m, k, n, bm, dtype):
     a = jax.random.normal(jax.random.key(m), (m, k), jnp.float32).astype(dtype)
     b = jax.random.normal(jax.random.key(n), (k, n), jnp.float32).astype(dtype)
-    out = registry.dispatch("matmul", a, b, prefer_ref=False,
+    out = registry.dispatch("matmul", a, b, impl="pallas",
                             bm=bm, bn=bm, bk=min(bm, k), morton=False)
     want = ref.matmul_ref(a, b)
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
@@ -44,9 +44,9 @@ def test_hbp_matmul_sweep(m, k, n, bm, dtype):
 def test_hbp_matmul_morton_equals_rowmajor():
     a = jax.random.normal(jax.random.key(0), (256, 256), jnp.float32)
     b = jax.random.normal(jax.random.key(1), (256, 256), jnp.float32)
-    o1 = registry.dispatch("matmul", a, b, prefer_ref=False,
+    o1 = registry.dispatch("matmul", a, b, impl="pallas",
                            bm=64, bn=64, bk=64, morton=True)
-    o2 = registry.dispatch("matmul", a, b, prefer_ref=False,
+    o2 = registry.dispatch("matmul", a, b, impl="pallas",
                            bm=64, bn=64, bk=64, morton=False)
     np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
 
@@ -56,7 +56,7 @@ def test_hbp_matmul_morton_equals_rowmajor():
                                            (64, 64, 64, True)])
 def test_bi_transpose_sweep(m, n, bt, morton, dtype):
     x = jax.random.normal(jax.random.key(m * n), (m, n), jnp.float32).astype(dtype)
-    out = registry.dispatch("transpose", x, prefer_ref=False, bt=bt, morton=morton)
+    out = registry.dispatch("transpose", x, impl="pallas", bt=bt, morton=morton)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x.T))
 
 
@@ -67,7 +67,7 @@ def test_flash_attention_sweep(bh, s, hd, causal, window, dtype):
     q = jax.random.normal(jax.random.key(1), (bh, s, hd), jnp.float32).astype(dtype)
     k = jax.random.normal(jax.random.key(2), (bh, s, hd), jnp.float32).astype(dtype)
     v = jax.random.normal(jax.random.key(3), (bh, s, hd), jnp.float32).astype(dtype)
-    out = registry.dispatch("attention", q, k, v, prefer_ref=False,
+    out = registry.dispatch("attention", q, k, v, impl="pallas",
                             causal=causal, window=window, q_block=64, kv_block=64)
     want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
@@ -79,7 +79,7 @@ def test_fft_sweep(rows, n):
     xr = jax.random.normal(jax.random.key(n), (rows, n), jnp.float32)
     xi = jax.random.normal(jax.random.key(n + 1), (rows, n), jnp.float32)
     x = (xr + 1j * xi).astype(jnp.complex64)
-    out = registry.dispatch("fft", x, prefer_ref=False)
+    out = registry.dispatch("fft", x, impl="pallas")
     want = ref.fft_ref(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-3, atol=2e-3)

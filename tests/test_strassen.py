@@ -87,13 +87,13 @@ def test_backend_matmul_dispatch_and_vjp():
     default, and gradients through both backends match the jnp grads."""
     a, b = _mats(128, jnp.float32)
     for backend in ("classical", "strassen"):
-        got = registry.dispatch("matmul", a, b, prefer_ref=False,
+        got = registry.dispatch("matmul", a, b, impl="pallas",
                                 backend=backend, cutoff=32)
         np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
                                    rtol=2e-3, atol=2e-3)
         da, db = jax.grad(
             lambda x, y: registry.dispatch(
-                "matmul", x, y, prefer_ref=False, backend=backend,
+                "matmul", x, y, impl="pallas", backend=backend,
                 cutoff=32).sum(), argnums=(0, 1))(a, b)
         np.testing.assert_allclose(np.asarray(da), np.asarray(b.sum(1)[None, :] * jnp.ones_like(a)),
                                    rtol=2e-3, atol=2e-3)
@@ -189,7 +189,7 @@ def test_search_replay_roundtrip_with_backend_keys(tune_dir, monkeypatch):
         autotune.clear_cache()  # force the JSON round-trip
         assert autotune.lookup("matmul", a, b) == entry["plan"]
         with autotune.mode_scope("replay"):
-            got = registry.dispatch("matmul", a, b, prefer_ref=False)
+            got = registry.dispatch("matmul", a, b, impl="pallas")
         np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
                                    rtol=2e-3, atol=2e-3)
     finally:
@@ -210,7 +210,7 @@ def test_dispatch_keys_forced_variant_overrides(tune_dir, monkeypatch):
     monkeypatch.setattr(autotune, "overlay", spy)
     a, b = _mats(64, jnp.float32)
     with autotune.mode_scope("replay"):
-        registry.dispatch("matmul", a, b, prefer_ref=False, backend="classical")
+        registry.dispatch("matmul", a, b, impl="pallas", backend="classical")
     assert captured.get("backend") == "classical"
 
 
@@ -247,7 +247,7 @@ def test_hbp_matmul_ragged_override_snaps():
     """A non-divisor tile override snaps to the largest divisor instead of
     tripping the old ``m % bm == 0`` assert."""
     a, b = _mats(96, jnp.float32)
-    got = registry.dispatch("matmul", a, b, prefer_ref=False,
+    got = registry.dispatch("matmul", a, b, impl="pallas",
                             bm=64, bn=64, bk=64)
     np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
                                rtol=1e-3, atol=1e-3)
@@ -257,7 +257,7 @@ def test_hbp_matmul_degenerate_snap_falls_back():
     """Prime-ish dims whose best divisor is sub-sublane take the jnp oracle
     instead of a catastrophically fine grid."""
     a, b = _mats(31, jnp.float32)
-    got = registry.dispatch("matmul", a, b, prefer_ref=False,
+    got = registry.dispatch("matmul", a, b, impl="pallas",
                             bm=16, bn=16, bk=16)
     np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
                                rtol=1e-4, atol=1e-4)

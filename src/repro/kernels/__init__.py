@@ -11,8 +11,12 @@ points, each in exactly one module:
     A frozen value object (per-op ``impl`` map with a ``"*"`` wildcard,
     per-op ``variants``, ``autotune`` mode, ``interpret``,
     ``strict_tiles``) on a context stack: the base is assembled from the
-    environment (``REPRO_IMPL`` with the ``op=backend[,op=backend]``
-    grammar, ``REPRO_STRICT_TILES``, ``REPRO_INTERPRET``), launchers
+    environment (``REPRO_IMPL`` with the
+    ``op=backend[:knob=value]*[,op=backend...]`` grammar — ``:knob=value``
+    suffixes set per-op variant knobs, e.g.
+    ``attention=pallas:kv_dtype=int8`` for the quantized KV cache or
+    ``matmul=pallas:qkv_fused=true`` for fused QKV projections —
+    ``REPRO_STRICT_TILES``, ``REPRO_INTERPRET``), launchers
     ``install()`` the ``--impl`` flag as a process layer, and
     ``apply()``/``pin()`` push scoped overrides (a pin records its reason —
     e.g. hybrid's ring-buffer decode, whose rotated cache violates the
@@ -38,6 +42,14 @@ points, each in exactly one module:
     ``KernelSpec``; the ``attention`` kernel covers cached decode via
     ``q_offset``/``kv_len`` and registers a recomputation backward, so
     serving prefill/decode and training all dispatch through one path.
+    GQA is kernel-native: callers hand K/V over at their *native* head
+    count with ``n_heads`` declaring the query head count, and the kv
+    ``index_map`` routes every query head's grid steps into its group's KV
+    row (dk/dv group-sum in the transposed grid's scratch) — no caller ever
+    materializes a cache-sized ``repeat_kv``.  An int8 KV cache
+    (``k_scale``/``v_scale`` per (batch, kv-head), selected by the policy's
+    attention ``kv_dtype=int8`` variant) dequantizes inside the kernel's
+    block load, streaming the cache at a quarter of the f32 bytes.
     ``simulator_program(name, n)`` builds the op's access-trace HBP program
     (``core.algorithms``) under the same name, so kernel dispatch and
     simulator cost cross-checks share one op namespace.
@@ -47,7 +59,9 @@ points, each in exactly one module:
     (fast-memory bytes, lane/sublane tiling, dtype width) pushed through the
     ``repro.core.costmodel`` envelopes (``oblivious_tile_edge``,
     ``seq_cache_complexity_*``).  No kernel signature carries a hard-coded
-    block size; ``plan_*`` functions return divisor-exact tile dicts and
+    block size; ``plan_*`` functions return divisor-exact tile dicts
+    (``plan_attention`` budgets per KV dtype — an int8 cache stream earns a
+    proportionally deeper KV panel) and
     ``resolve_run_options`` fills the model layer's ``RunOptions`` tiles.
     ``REPRO_FAST_BYTES`` overrides the queried fast-memory size.
 

@@ -193,6 +193,11 @@ def sem_class(op: str, args, kwargs: Optional[dict] = None) -> str:
             parts.append(f"{flag}=?")
     if op == "attention":
         parts.append(f"decode={args[0].shape[1] != args[1].shape[1]}")
+        # a quantized KV stream (int8 cache vs f32 q) re-shapes the optimum
+        # (4x deeper panels) — never share an entry with the uniform-dtype
+        # regime
+        if args[1].dtype != args[0].dtype:
+            parts.append(f"kv_dtype={jnp.dtype(args[1].dtype).name}")
     if op == "matmul":
         backend = kwargs.get("backend")
         if backend is None:
@@ -344,10 +349,12 @@ def _attention_dims(q, k, v):
 
 def _attention_ws(plan, q, k, v):
     itemsize = jnp.dtype(q.dtype).itemsize
+    kv_item = jnp.dtype(k.dtype).itemsize  # quantized KV: narrower panels
     hd = q.shape[2]
     qb, kb = plan["q_block"], plan["kv_block"]
-    # q rows + f32 acc rows, k/v panels, the f32 P tile, (m, l) columns
-    return qb * hd * (itemsize + 4) + 2 * kb * hd * itemsize \
+    # q rows + f32 acc rows, k/v panels (kv width), the f32 P tile,
+    # (m, l) columns
+    return qb * hd * (itemsize + 4) + 2 * kb * hd * kv_item \
         + 4 * qb * kb + 8 * qb
 
 

@@ -37,13 +37,31 @@ grid) and dk/dv (q-sweep grid) without ever materializing an O(sq*sk)
 tensor.  A pallas-resolving execution policy therefore no longer needs to
 route attention around the kernel under autodiff.
 
-Supports GQA by passing pre-repeated or per-head-group K/V slices from the
-model adapter (the repeat is jnp-level, so KV-head gradients fold back via
-autodiff of the adapter).  ``q_block=None`` / ``kv_block=None`` (the
-defaults) plan the blocks from the queried device via
-``repro.kernels.planner``; ragged sequence lengths snap each block down to
-the largest divisor of its axis instead of asserting, and a degenerate
-snap (prime-ish lengths) falls back to the jnp oracle.
+GQA is kernel-native: callers pass K/V at their *native* head count and the
+kv ``index_map`` routes each query head's grid step straight into its group's
+KV row (``bh -> (bh // h) * kvh + (bh % h) // n_rep`` under the batch-major
+head fold) — the cache-sized ``repeat_kv`` materialization the adapter used
+to pay per decode step is gone; every head in a group re-reads the *same*
+blocks, which is exactly the paper's O(1)-block-sharing discipline.  The
+caller declares its per-batch query head count via ``n_heads`` whenever
+``k.shape[0] < q.shape[0]``.  The backward keeps the no-copy contract: dq
+runs on the forward grid with the same kv index map, and dk/dv extend the
+transposed KV-outer grid's inner axis to ``n_rep * nq`` — each KV tile's
+scratch accumulates the contributions of all ``n_rep`` query heads in its
+group before emitting, so the group sum happens in VMEM, never through an
+O(n_rep)-sized intermediate.
+
+Quantized KV (serving): int8 ``k``/``v`` with per-(batch, kv-head) f32
+scales (``k_scale``/``v_scale``, shape ``(kbh,)``) dequantize *inside* the
+kernel block load — the cache streams at 1/4 the f32 block traffic and the
+f32 copy never exists outside VMEM.  The quantized path is forward-only
+(decode never differentiates; int8 carries no tangent).
+
+``q_block=None`` / ``kv_block=None`` (the defaults) plan the blocks from
+the queried device via ``repro.kernels.planner`` (per-dtype envelopes: an
+int8 KV stream budgets a deeper panel); ragged sequence lengths snap each
+block down to the largest divisor of its axis instead of asserting, and a
+degenerate snap (prime-ish lengths) falls back to the jnp oracle.
 """
 from __future__ import annotations
 
@@ -60,6 +78,15 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.morton import grid_decode
 
 NEG_INF = -1e30
+
+
+def _kv_index(b_, *, h: int, kvh: int, n_rep: int):
+    """Native-KV-head GQA index: query batch-head ``b_`` (batch-major fold,
+    head = kv_head * n_rep + rep) -> its group's KV batch-head row.  Plain
+    integer arithmetic, works on traced grid indices."""
+    if n_rep == 1:
+        return b_
+    return (b_ // h) * kvh + (b_ % h) // n_rep
 
 
 def _mask(qoff, kvlen, qi, kb, *, causal, window, q_block, kv_block,
@@ -95,10 +122,16 @@ def _run_kv_block(body, kb, kvlen, *, kv_block, full_len):
         pl.when(kb * kv_block < kvlen)(body)
 
 
-def _flash_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
-                  m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+def _flash_kernel(qoff_ref, kvlen_ref, *refs, scale: float, causal: bool,
                   window: int, q_block: int, kv_block: int, nk: int,
-                  full_len: bool, decode):
+                  full_len: bool, decode, quantized: bool, h: int, kvh: int,
+                  n_rep: int):
+    if quantized:
+        (kscale_ref, vscale_ref, q_ref, k_ref, v_ref,
+         o_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref = refs
+        kscale_ref = vscale_ref = None
     kb = pl.program_id(1)
 
     @pl.when(kb == 0)
@@ -108,12 +141,18 @@ def _flash_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     qoff, kvlen = qoff_ref[0], kvlen_ref[0]
-    _, qi = decode(pl.program_id(0))
+    b_, qi = decode(pl.program_id(0))
 
     def _body():
         q = q_ref[0].astype(jnp.float32)  # (q_block, hd)
         k = k_ref[0].astype(jnp.float32)  # (kv_block, hd)
         v = v_ref[0].astype(jnp.float32)
+        if quantized:
+            # per-(batch, kv-head) dequant at the block load: the int8 cache
+            # is the only thing that ever crossed slow memory
+            kvb = _kv_index(b_, h=h, kvh=kvh, n_rep=n_rep)
+            k = k * kscale_ref[kvb]
+            v = v * vscale_ref[kvb]
 
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         ok = _mask(qoff, kvlen, qi, kb, causal=causal, window=window,
@@ -156,7 +195,9 @@ def _bwd_dq_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
                    window: int, q_block: int, kv_block: int, nk: int,
                    full_len: bool, decode):
     """dq = sum over KV blocks of (P * (dO K^T... ) ) — same grid shape and
-    schedule as the forward, accumulating dq in scratch."""
+    schedule as the forward, accumulating dq in scratch.  GQA needs no body
+    change here: the kv index map hands each query head its group's native
+    KV blocks."""
     kb = pl.program_id(1)
 
     @pl.when(kb == 0)
@@ -194,14 +235,17 @@ def _bwd_dq_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
 def _bwd_dkv_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
                     delta_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
                     causal: bool, window: int, q_block: int, kv_block: int,
-                    nq: int, full_len: bool, decode):
-    """dk/dv: the transposed sweep — outer grid over (bh, nk) KV tiles, inner
-    loop over q blocks, accumulating (kv_block, hd) dk/dv in scratch.  KV
-    blocks beyond ``kv_len`` (and, under causal masking, q blocks entirely
+                    nq: int, n_rep: int, full_len: bool, decode):
+    """dk/dv: the transposed sweep — outer grid over (kbh, nk) *native* KV
+    tiles, inner loop over ``n_rep * nq`` (every q block of every query head
+    in this KV head's group), accumulating (kv_block, hd) dk/dv in scratch —
+    the GQA group sum lives in the accumulator, no repeated KV ever exists.
+    KV blocks beyond ``kv_len`` (and, under causal masking, q blocks entirely
     before the KV block) skip the matmuls but still emit their zeros."""
-    qi = pl.program_id(1)
+    j = pl.program_id(1)
+    qi = j % nq if n_rep > 1 else j  # inner axis = (rep, qi), rep-major
 
-    @pl.when(qi == 0)
+    @pl.when(j == 0)
     def _init():
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
@@ -239,18 +283,41 @@ def _bwd_dkv_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
     else:
         pl.when(live)(_body)
 
-    @pl.when(qi == nq - 1)
+    @pl.when(j == n_rep * nq - 1)
     def _emit():
         dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
         dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
 
 
-def _fwd_call(q, k, v, qoff, kvlen, *, causal, window, q_block, kv_block,
-              nk_run, full_len, interpret):
+def _gqa_geometry(q, k, n_heads: Optional[int]):
+    """(h, kvh, n_rep) from the folded shapes and the caller's declared
+    per-batch query head count."""
+    bh, kbh = q.shape[0], k.shape[0]
+    if bh == kbh:
+        return bh, kbh, 1
+    if n_heads is None:
+        raise ValueError(
+            f"native-GQA flash_attention: k has {kbh} batch-heads vs q's "
+            f"{bh}; pass n_heads (query heads per batch) so the kv index "
+            "map can decompose the batch-head fold")
+    if bh % kbh != 0:
+        raise ValueError(f"q batch-heads {bh} not a multiple of kv "
+                         f"batch-heads {kbh}")
+    n_rep = bh // kbh
+    if n_heads % n_rep != 0 or bh % n_heads != 0:
+        raise ValueError(f"n_heads={n_heads} incompatible with q/kv "
+                         f"batch-heads ({bh}, {kbh})")
+    return n_heads, n_heads // n_rep, n_rep
+
+
+def _fwd_call(q, k, v, qoff, kvlen, kscale, vscale, *, causal, window,
+              q_block, kv_block, nk_run, full_len, n_heads, interpret):
     """Forward pallas_call: returns (out, lse)."""
     bh, sq, hd = q.shape
     nq = sq // q_block
     scale = 1.0 / math.sqrt(hd)
+    h, kvh, n_rep = _gqa_geometry(q, k, n_heads)
+    quantized = kscale is not None
     # BI order over the flattened (bh, nq) outer grid; the KV dim stays the
     # trailing (contiguous) grid axis so the scratch combine is well-defined.
     decode = grid_decode(bh, nq)
@@ -262,21 +329,29 @@ def _fwd_call(q, k, v, qoff, kvlen, *, causal, window, q_block, kv_block,
 
     def kv_map(g, j):
         b, _ = decode(g)
-        return (b, j, 0)
+        return (_kv_index(b, h=h, kvh=kvh, n_rep=n_rep), j, 0)
 
     def row_map(g, j):
         b, i = decode(g)
         return (b, i)
 
+    in_specs = [smem, smem]
+    operands = [qoff, kvlen]
+    if quantized:
+        in_specs += [smem, smem]
+        operands += [kscale, vscale]
+    in_specs += [pl.BlockSpec((1, q_block, hd), q_map),
+                 pl.BlockSpec((1, kv_block, hd), kv_map),
+                 pl.BlockSpec((1, kv_block, hd), kv_map)]
+    operands += [q, k, v]
+
     return pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
                           window=window, q_block=q_block, kv_block=kv_block,
-                          nk=nk_run, full_len=full_len, decode=decode),
+                          nk=nk_run, full_len=full_len, decode=decode,
+                          quantized=quantized, h=h, kvh=kvh, n_rep=n_rep),
         grid=(bh * nq, nk_run),
-        in_specs=[smem, smem,
-                  pl.BlockSpec((1, q_block, hd), q_map),
-                  pl.BlockSpec((1, kv_block, hd), kv_map),
-                  pl.BlockSpec((1, kv_block, hd), kv_map)],
+        in_specs=in_specs,
         out_specs=[pl.BlockSpec((1, q_block, hd), q_map),
                    pl.BlockSpec((1, q_block), row_map)],
         out_shape=[jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
@@ -287,18 +362,21 @@ def _fwd_call(q, k, v, qoff, kvlen, *, causal, window, q_block, kv_block,
             pltpu.VMEM((q_block, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(qoff, kvlen, q, k, v)
+    )(*operands)
 
 
 def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
-              kv_block, nk_run, full_len, interpret):
+              kv_block, nk_run, full_len, n_heads, interpret):
     """Backward pallas_calls: dq over the forward's (q-outer, kv-inner) grid,
-    dk/dv over the transposed (kv-outer, q-inner) grid."""
+    dk/dv over the transposed (kv-outer, (rep, q)-inner) grid at the native
+    KV head count."""
     bh, sq, hd = q.shape
     sk = k.shape[1]
+    kbh = k.shape[0]
     nq = sq // q_block
     nk_full = sk // kv_block
     scale = 1.0 / math.sqrt(hd)
+    h, kvh, n_rep = _gqa_geometry(q, k, n_heads)
     delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
 
@@ -310,7 +388,7 @@ def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
 
     def kv_map(g_, j):
         b, _ = dec_q(g_)
-        return (b, j, 0)
+        return (_kv_index(b, h=h, kvh=kvh, n_rep=n_rep), j, 0)
 
     def row_map(g_, j):
         b, i = dec_q(g_)
@@ -334,9 +412,17 @@ def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
         interpret=interpret,
     )(qoff, kvlen, q, k, v, g, lse, delta)
 
-    # transposed grid: the full nk (not the shrunk run) so every dk/dv block
-    # is written — dead blocks emit the zeros their masked keys earn
-    dec_kv = grid_decode(bh, nk_full)
+    # transposed grid at the NATIVE kv head count: the full nk (not the
+    # shrunk run) so every dk/dv block is written — dead blocks emit the
+    # zeros their masked keys earn.  The inner axis covers (rep, q block):
+    # each KV tile accumulates its whole group's contributions in scratch
+    dec_kv = grid_decode(kbh, nk_full)
+
+    def _qbh(b, j):
+        # query batch-head for kv batch-head ``b`` and inner index ``j``
+        if n_rep == 1:
+            return b
+        return (b // kvh) * h + (b % kvh) * n_rep + j // nq
 
     def kv_map_t(g_, j):
         b, i = dec_kv(g_)
@@ -344,17 +430,18 @@ def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
 
     def q_map_t(g_, j):
         b, _ = dec_kv(g_)
-        return (b, j, 0)
+        return (_qbh(b, j), j % nq if n_rep > 1 else j, 0)
 
     def row_map_t(g_, j):
         b, _ = dec_kv(g_)
-        return (b, j)
+        return (_qbh(b, j), j % nq if n_rep > 1 else j)
 
     dk, dv = pl.pallas_call(
         functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
                           window=window, q_block=q_block, kv_block=kv_block,
-                          nq=nq, full_len=full_len, decode=dec_kv),
-        grid=(bh * nk_full, nq),
+                          nq=nq, n_rep=n_rep, full_len=full_len,
+                          decode=dec_kv),
+        grid=(kbh * nk_full, n_rep * nq),
         in_specs=[smem, smem,
                   pl.BlockSpec((1, q_block, hd), q_map_t),
                   pl.BlockSpec((1, kv_block, hd), kv_map_t),
@@ -364,8 +451,8 @@ def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
                   pl.BlockSpec((1, q_block), row_map_t)],
         out_specs=[pl.BlockSpec((1, kv_block, hd), kv_map_t),
                    pl.BlockSpec((1, kv_block, hd), kv_map_t)],
-        out_shape=[jax.ShapeDtypeStruct((bh, sk, hd), k.dtype),
-                   jax.ShapeDtypeStruct((bh, sk, hd), v.dtype)],
+        out_shape=[jax.ShapeDtypeStruct((kbh, sk, hd), k.dtype),
+                   jax.ShapeDtypeStruct((kbh, sk, hd), v.dtype)],
         scratch_shapes=[pltpu.VMEM((kv_block, hd), jnp.float32),
                         pltpu.VMEM((kv_block, hd), jnp.float32)],
         interpret=interpret,
@@ -375,20 +462,29 @@ def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
 
 @functools.lru_cache(maxsize=None)
 def _flash_fn(causal: bool, window: int, q_block: int, kv_block: int,
-              nk_run: int, full_len: bool, interpret: bool):
+              nk_run: int, full_len: bool, n_heads: Optional[int],
+              quantized: bool, interpret: bool):
     """custom-VJP flash attention for one static config, jitted so repeated
-    eager calls (tests, benchmarks) reuse the lowered kernel."""
+    eager calls (tests, benchmarks) reuse the lowered kernel.  The quantized
+    (int8 KV + scales) variant is forward-only."""
     cfg = dict(causal=causal, window=window, q_block=q_block,
                kv_block=kv_block, nk_run=nk_run, full_len=full_len,
-               interpret=interpret)
+               n_heads=n_heads, interpret=interpret)
+
+    if quantized:
+        def fa_quant(q, k, v, qoff, kvlen, kscale, vscale):
+            out, _ = _fwd_call(q, k, v, qoff, kvlen, kscale, vscale, **cfg)
+            return out
+
+        return jax.jit(fa_quant)
 
     @jax.custom_vjp
     def fa(q, k, v, qoff, kvlen):
-        out, _ = _fwd_call(q, k, v, qoff, kvlen, **cfg)
+        out, _ = _fwd_call(q, k, v, qoff, kvlen, None, None, **cfg)
         return out
 
     def fa_fwd(q, k, v, qoff, kvlen):
-        out, lse = _fwd_call(q, k, v, qoff, kvlen, **cfg)
+        out, lse = _fwd_call(q, k, v, qoff, kvlen, None, None, **cfg)
         return out, (q, k, v, qoff, kvlen, out, lse)
 
     def fa_bwd(res, g):
@@ -406,22 +502,37 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     kv_len: Optional[Union[int, jax.Array]] = None,
                     q_block: Optional[int] = None,
                     kv_block: Optional[int] = None,
+                    n_heads: Optional[int] = None,
+                    k_scale: Optional[jax.Array] = None,
+                    v_scale: Optional[jax.Array] = None,
                     interpret: bool = True) -> jax.Array:
-    """q: (bh, sq, hd); k, v: (bh, sk, hd) — heads pre-folded into batch
-    (GQA repeat handled by the caller).  Returns (bh, sq, hd).
+    """q: (bh, sq, hd); k, v: (kbh, sk, hd) — heads pre-folded into batch
+    (batch-major: bh = batch * heads + head).  Returns (bh, sq, hd).
+
+    GQA is kernel-native: ``kbh`` may be ``bh / n_rep`` (K/V at their native
+    head count) with ``n_heads`` declaring the per-batch query head count —
+    the kv index map routes each query head's blocks to its group's KV row,
+    and the backward group-sums dk/dv inside the transposed grid.  No
+    caller-side repeat.
 
     ``q_offset`` places query row i at absolute position ``q_offset + i``
     (keys at ``0..sk-1``); ``kv_len`` masks keys at positions >= it.  Both
     accept traced scalars (decode loops never recompile); a static ``kv_len``
     additionally shrinks the KV grid to ``ceil(kv_len / kv_block)`` blocks.
-    Differentiable w.r.t. q/k/v via the registered recomputation backward.
+    ``k_scale``/``v_scale`` (f32 ``(kbh,)``, paired with an int8 ``k``/``v``)
+    dequantize per KV batch-head inside the kernel; the quantized path is
+    forward-only.  Otherwise differentiable w.r.t. q/k/v via the registered
+    recomputation backward.
     """
     from repro.kernels import planner
 
     bh, sq, hd = q.shape
     sk = k.shape[1]
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
+    quantized = k_scale is not None
     if q_block is None or kv_block is None:
-        plan = planner.plan_attention(sq, sk, hd, q.dtype)
+        plan = planner.plan_attention(sq, sk, hd, q.dtype, kv_dtype=k.dtype)
         q_block = q_block if q_block is not None else plan["q_block"]
         kv_block = kv_block if kv_block is not None else plan["kv_block"]
     # ragged lengths snap each block to the largest divisor of its axis (the
@@ -434,7 +545,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         from repro.kernels import ref
 
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
-                                       q_offset=q_offset, kv_len=kv_len)
+                                       q_offset=q_offset, kv_len=kv_len,
+                                       n_heads=n_heads, k_scale=k_scale,
+                                       v_scale=v_scale)
+    _gqa_geometry(q, k, n_heads)  # validate early, outside the jit
     nk_full = sk // kv_block
 
     if kv_len is None:
@@ -457,5 +571,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     # plain self-attention config compiles to the pre-decode kernel body
     full_len = static_len is not None and static_len >= sk
     fa = _flash_fn(bool(causal), int(window), q_block, kv_block, nk_run,
-                   full_len, bool(interpret))
+                   full_len, None if n_heads is None else int(n_heads),
+                   quantized, bool(interpret))
+    if quantized:
+        kbh = k.shape[0]
+        return fa(q, k, v, qoff_arr, kvlen_arr,
+                  jnp.asarray(k_scale, jnp.float32).reshape(kbh),
+                  jnp.asarray(v_scale, jnp.float32).reshape(kbh))
     return fa(q, k, v, qoff_arr, kvlen_arr)

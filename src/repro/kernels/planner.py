@@ -260,10 +260,19 @@ DECODE_MAX_SQ = 16
 
 
 def plan_attention(sq: int, sk: int, hd: int, dtype,
-                   dp: Optional[DeviceParams] = None) -> dict:
+                   dp: Optional[DeviceParams] = None, *,
+                   kv_dtype=None) -> dict:
     """Flash-attention (q_block, kv_block): solve the working-set quadratic
-    4 t^2 (the f32 P tile) + t * hd * (3 itemsize + 4) <= budget for the
-    square block t, then clamp each block to a divisor of its axis.
+    4 t^2 (the f32 P tile) + t * hd * (itemsize + 2 kv_itemsize + 4)
+    <= budget for the square block t, then clamp each block to a divisor of
+    its axis.
+
+    Per-dtype envelopes: ``kv_dtype`` (default: the q dtype) sets the k/v
+    element width independently — a quantized int8 KV cache streams panels
+    at a quarter of the f32 bytes, so the same budget admits a 4x deeper KV
+    panel (the SPMS register/block-reuse argument at reduced element width),
+    and the sublane multiple for the KV axis follows the KV dtype's packing
+    (32 int8 rows vs 8 f32).
 
     Decode regime (sq <= DECODE_MAX_SQ over a longer KV axis — serving a
     growing cache): the q block is the whole (tiny) query and the envelope
@@ -271,18 +280,21 @@ def plan_attention(sq: int, sk: int, hd: int, dtype,
     the resident bytes are the k/v rows plus the f32 P column."""
     dp = dp or device_params()
     itemsize = jnp.dtype(dtype).itemsize
+    kv_item = jnp.dtype(kv_dtype).itemsize if kv_dtype is not None else itemsize
+    kv_sub = dp.sublane(kv_dtype if kv_dtype is not None else dtype)
     budget = _budget(dp)
     if sq <= DECODE_MAX_SQ and sk > sq:
-        per_row = 2 * hd * itemsize + 4 * sq + 4  # k/v rows + P col + l bits
+        per_row = 2 * hd * kv_item + 4 * sq + 4  # k/v rows + P col + l bits
         kb = _pow2_floor(max(budget // per_row, 1))
         return {"q_block": sq,
-                "kv_block": divisor_tile(sk, kb, dp.sublane(dtype))}
-    c1 = hd * (3 * itemsize + 4) + 8  # q/k/v rows + f32 acc row + (m, l)
+                "kv_block": divisor_tile(sk, kb, kv_sub)}
+    # q row + f32 acc row + k/v rows (kv width) + (m, l)
+    c1 = hd * (itemsize + 2 * kv_item + 4) + 8
     t = int((-c1 + math.sqrt(c1 * c1 + 16.0 * budget)) / 8.0)
     t = _pow2_floor(max(t, 1))
     sub = dp.sublane(dtype)
     qb = divisor_tile(sq, t, sub)
-    kb = divisor_tile(sk, 2 * t, sub)  # kv stream gets the deeper panel
+    kb = divisor_tile(sk, 2 * t, kv_sub)  # kv stream gets the deeper panel
     return {"q_block": qb, "kv_block": kb}
 
 

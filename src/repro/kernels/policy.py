@@ -134,7 +134,19 @@ class ExecutionPolicy:
         return replace(self, **updates)
 
     def describe(self) -> str:
-        parts = [f"{op}={backend}" for op, backend in sorted(self.impl.items())]
+        """One-line rendering; the impl/variant prefix round-trips through
+        :func:`parse_impl_spec` (``op=backend:knob=value``; an op carrying
+        variants but no impl entry prints as ``op=auto:...``, which parses
+        back to the same dispatch decisions)."""
+        def _fmt_knob(v):
+            return str(v).lower() if isinstance(v, bool) else str(v)
+
+        parts = []
+        for op in sorted(set(self.impl) | set(self.variants)):
+            entry = f"{op}={self.impl.get(op, 'auto')}"
+            for knob, v in sorted(self.variants.get(op, {}).items()):
+                entry += f":{knob}={_fmt_knob(v)}"
+            parts.append(entry)
         for f_name in ("autotune", "interpret", "strict_tiles", "reason"):
             v = getattr(self, f_name)
             if v not in (None, False):
@@ -146,27 +158,44 @@ class ExecutionPolicy:
 # the ambient default (environment assembly)
 # ---------------------------------------------------------------------------
 
-def parse_impl_arg(spec: str) -> dict[str, str]:
-    """The ``--impl`` / ``REPRO_IMPL`` grammar: ``op=backend[,op=backend]``
-    where op is a registered kernel name or ``*`` and backend one of
-    ``auto`` | ``jnp`` | ``ref`` | ``pallas``.  A bare backend with no
-    ``=`` is shorthand for the wildcard (``pallas`` == ``*=pallas``).
-    Unknown op names raise: a typo'd entry matching nothing would
-    otherwise silently leave every op on ``auto`` — the experiment's
-    'forced' numbers would be the default path."""
+def _parse_knob_value(raw: str):
+    """Typed variant-knob values: bools (``true``/``false``), ints, else the
+    raw string (e.g. a dtype name or matmul backend)."""
+    low = raw.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    try:
+        return int(raw)
+    except ValueError:
+        return raw
+
+
+def parse_impl_spec(spec: str) -> tuple[dict[str, str], dict[str, dict]]:
+    """The full ``--impl`` / ``REPRO_IMPL`` grammar with variant knobs:
+    ``op=backend[:knob=value]*[,op=backend...]`` — e.g.
+    ``matmul=pallas:backend=classical`` or
+    ``attention=pallas:kv_dtype=int8``.  Returns ``(impl, variants)`` maps
+    ready for :meth:`ExecutionPolicy.with_`.  A bare backend with no ``=``
+    is shorthand for the wildcard (``pallas`` == ``*=pallas``); knobs on the
+    wildcard are rejected (a variant knob is per-op by construction).
+    Unknown op names raise: a typo'd entry matching nothing would otherwise
+    silently leave every op on ``auto`` — the experiment's 'forced' numbers
+    would be the default path."""
     from repro.kernels import registry  # runtime-only: no import cycle
 
     known = set(registry.names()) | {"*"}
-    out: dict[str, str] = {}
+    impl: dict[str, str] = {}
+    variants: dict[str, dict] = {}
     for part in spec.split(","):
         part = part.strip()
         if not part:
             continue
-        if "=" in part:
-            op, _, backend = part.partition("=")
+        head, *knob_parts = part.split(":")
+        if "=" in head:
+            op, _, backend = head.partition("=")
             op, backend = op.strip(), backend.strip()
         else:
-            op, backend = "*", part
+            op, backend = "*", head
         if not op:
             raise ValueError(f"bad --impl entry {part!r}: empty op name")
         if op not in known:
@@ -175,8 +204,28 @@ def parse_impl_arg(spec: str) -> dict[str, str]:
         if backend not in IMPLS:
             raise ValueError(f"bad --impl entry {part!r}: unknown backend "
                              f"{backend!r} (expected one of {IMPLS})")
-        out[op] = backend
-    return out
+        impl[op] = backend
+        for kp in knob_parts:
+            kp = kp.strip()
+            if not kp:
+                continue
+            if op == "*":
+                raise ValueError(f"bad --impl entry {part!r}: variant knobs "
+                                 "need a concrete op, not the * wildcard")
+            knob, sep, val = kp.partition("=")
+            if not sep or not knob.strip() or not val.strip():
+                raise ValueError(f"bad --impl entry {part!r}: variant knob "
+                                 f"{kp!r} must be knob=value")
+            variants.setdefault(op, {})[knob.strip()] = \
+                _parse_knob_value(val.strip())
+    return impl, variants
+
+
+def parse_impl_arg(spec: str) -> dict[str, str]:
+    """Back-compat impl-map-only parse of the ``--impl`` grammar (variant
+    knobs are accepted and dropped; use :func:`parse_impl_spec` to keep
+    them)."""
+    return parse_impl_spec(spec)[0]
 
 
 def _truthy(val: Optional[str]) -> bool:
@@ -203,8 +252,10 @@ def ambient() -> ExecutionPolicy:
     if hit is not None:
         return hit
     impl_env, strict_env, interp_env = key
+    impl, variants = parse_impl_spec(impl_env) if impl_env else ({}, {})
     pol = ExecutionPolicy(
-        impl=parse_impl_arg(impl_env) if impl_env else {},
+        impl=impl,
+        variants=variants,
         strict_tiles=_truthy(strict_env),
         interpret=True if _truthy(interp_env) else None,
     )
@@ -291,6 +342,10 @@ def from_run_options(opts) -> Optional[dict]:
             impl[op] = v
     if impl:
         updates["impl"] = impl
+    if getattr(opts, "fused_qkv", False):
+        # one (d, 3h*hd) matmul per attention block instead of three — the
+        # model layer reads this variant in ``common.qkv_project``
+        updates["variants"] = {"matmul": {"qkv_fused": True}}
     tune = getattr(opts, "autotune", None)
     if tune is not None:
         updates["autotune"] = tune

@@ -26,15 +26,38 @@ def fft_ref(x: jax.Array) -> jax.Array:
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window: int = 0,
-                        q_offset=None, kv_len=None) -> jax.Array:
-    """q, k, v: (bh, s, hd).  ``q_offset`` places query row i at absolute
-    position ``q_offset + i`` (keys at 0..sk-1); ``kv_len`` masks keys at
-    positions >= it.  Rows with every key masked return zeros (matching the
-    kernel's ``l_safe`` guard) rather than a uniform average of v."""
+                        q_offset=None, kv_len=None, n_heads=None,
+                        k_scale=None, v_scale=None) -> jax.Array:
+    """q: (bh, sq, hd); k, v: (kbh, sk, hd).  ``q_offset`` places query row i
+    at absolute position ``q_offset + i`` (keys at 0..sk-1); ``kv_len`` masks
+    keys at positions >= it.  Rows with every key masked return zeros
+    (matching the kernel's ``l_safe`` guard) rather than a uniform average
+    of v.
+
+    Native-GQA twin of the kernel: ``kbh`` may be ``bh / n_rep`` with
+    ``n_heads`` the per-batch query head count (batch-major fold, head =
+    kv_head * n_rep + rep).  ``k_scale``/``v_scale`` (f32 ``(kbh,)``)
+    dequantize an int8 k/v per KV batch-head before the scores."""
     bh, sq, hd = q.shape
-    sk = k.shape[1]
+    kbh, sk = k.shape[0], k.shape[1]
     scale = 1.0 / math.sqrt(hd)
-    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * jnp.asarray(k_scale, jnp.float32).reshape(kbh, 1, 1)
+    if v_scale is not None:
+        vf = vf * jnp.asarray(v_scale, jnp.float32).reshape(kbh, 1, 1)
+    if kbh != bh:
+        # grouped: q (b, kvh, n_rep, sq, hd) against k/v (b, kvh, sk, hd)
+        n_rep = bh // kbh
+        h = n_heads
+        assert h is not None and h % n_rep == 0 and bh % h == 0, (bh, kbh, h)
+        b, kvh = bh // h, h // n_rep
+        qg = q.astype(jnp.float32).reshape(b, kvh, n_rep, sq, hd)
+        kg = kf.reshape(b, kvh, sk, hd)
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, kg) * scale
+    else:
+        s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kf) * scale
     qoff = 0 if q_offset is None else jnp.asarray(q_offset, jnp.int32).reshape(())
     qp = qoff + jnp.arange(sq)[:, None]
     kp = jnp.arange(sk)[None, :]
@@ -45,7 +68,15 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ok &= kp <= qp
     if window > 0:
         ok &= kp > qp - window
+    any_ok = ok.any(axis=-1)  # (sq,)
+    if kbh != bh:
+        s = jnp.where(ok[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(any_ok[None, None, None, :, None], p, 0.0)
+        vg = vf.reshape(b, kvh, sk, hd)
+        out = jnp.einsum("bgrqk,bgkd->bgrqd", p, vg)
+        return out.reshape(bh, sq, hd).astype(q.dtype)
     s = jnp.where(ok[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(ok.any(axis=-1)[None, :, None], p, 0.0)
-    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+    p = jnp.where(any_ok[None, :, None], p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

@@ -304,8 +304,10 @@ register(KernelSpec(
     name="attention",
     pallas=flash_attention,
     ref=ref.flash_attention_ref,
+    # per-dtype envelopes: an int8 KV cache budgets a deeper panel
     plan=lambda q, k, v: planner.plan_attention(q.shape[1], k.shape[1],
-                                                q.shape[2], q.dtype),
+                                                q.shape[2], q.dtype,
+                                                kv_dtype=k.dtype),
     pallas_only=("q_block", "kv_block"),
     # recomputation-style backward kernels (dq + dk/dv) registered as a
     # custom VJP in flash_attention — training no longer routes around it

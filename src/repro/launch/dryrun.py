@@ -224,7 +224,7 @@ def main() -> int:
     if args.impl:
         from repro.kernels import policy
 
-        policy.parse_impl_arg(args.impl)  # validate before fan-out
+        policy.parse_impl_spec(args.impl)  # validate (impl + knobs) pre-fan-out
         os.environ["REPRO_IMPL"] = args.impl
 
     OUT_DIR.mkdir(parents=True, exist_ok=True)

@@ -12,10 +12,17 @@ grammar
     --impl op=backend[,op=backend]     e.g. --impl attention=pallas
     --impl '*=pallas'                  wildcard: every op
     --impl pallas                      bare backend == '*=backend'
+    --impl op=backend:knob=value       variant knobs, e.g.
+                                       --impl 'attention=pallas:kv_dtype=int8'
+                                       --impl 'matmul=pallas:backend=classical'
 
 where op is a registered kernel name (``scan`` | ``matmul`` | ``transpose``
 | ``attention`` | ``fft``) or ``*``, and backend one of ``auto`` (registry
-decides) | ``jnp`` | ``pallas``.  Under a pallas attention policy, prefill
+decides) | ``jnp`` | ``pallas``.  ``:knob=value`` suffixes set per-op
+variant knobs on the policy (``attention kv_dtype=int8`` selects the
+quantized KV cache; ``matmul backend=...``/``qkv_fused=true`` pin the
+matmul schedule / fused projections).  Under a pallas attention policy,
+prefill
 dispatches as zero-offset self-attention and decode as a cached-attention
 call where the step position flows into the kernel as a traced ``q_offset``
 (and, causally, the KV valid-length) — per-step positions never retrace
@@ -133,8 +140,8 @@ def main():
 
     if args.impl:
         from repro.kernels import policy
-        policy.install(policy.ambient().with_(
-            impl=policy.parse_impl_arg(args.impl)))
+        impl, variants = policy.parse_impl_spec(args.impl)
+        policy.install(policy.ambient().with_(impl=impl, variants=variants))
 
     cfg = get_smoke_config(args.arch) if args.reduced else get_config(args.arch)
     from repro.launch.mesh import make_debug_mesh

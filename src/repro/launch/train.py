@@ -140,8 +140,8 @@ def main():
 
     if args.impl:
         from repro.kernels import policy
-        policy.install(policy.ambient().with_(
-            impl=policy.parse_impl_arg(args.impl)))
+        impl, variants = policy.parse_impl_spec(args.impl)
+        policy.install(policy.ambient().with_(impl=impl, variants=variants))
 
     cfg = get_smoke_config(args.arch) if args.reduced else get_config(args.arch)
     n = len(jax.devices())

@@ -131,6 +131,7 @@ def _blockwise_fwd_inner(qs, ks, vs, qp, kp, window, *, causal, scale, n_rep):
     kv-blocks.  Returns (out_blocks, lse_blocks) — the BP down-pass with the
     online-softmax combine as the up-pass."""
     nq, b, h, q_block, hd = qs.shape
+    kvh = h // n_rep
 
     def per_qblock(carry, qi):
         qb, qpb = qi
@@ -138,20 +139,33 @@ def _blockwise_fwd_inner(qs, ks, vs, qp, kp, window, *, causal, scale, n_rep):
         def per_kvblock(state, ki):
             m, l, acc = state
             kb, vb, kpb = ki
-            kb_r = jnp.repeat(kb, n_rep, axis=1) if n_rep > 1 else kb
-            vb_r = jnp.repeat(vb, n_rep, axis=1) if n_rep > 1 else vb
-            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb_r,
-                           preferred_element_type=jnp.float32) * scale
+            kb_len = kb.shape[2]
+            if n_rep > 1:
+                # native KV heads: fold q's per-group heads into the einsum
+                # (head h = kv_head * n_rep + rep) — the oracle shares the
+                # kernel's no-copy discipline, no block ever repeats
+                qg = qb.reshape(b, kvh, n_rep, q_block, hd)
+                s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, kb,
+                               preferred_element_type=jnp.float32,
+                               ).reshape(b, h, q_block, kb_len) * scale
+            else:
+                s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb,
+                               preferred_element_type=jnp.float32) * scale
             s = constrain(s, "batch", "heads", "*", "*")
             s = s + _mask_bias(qpb, kpb, causal=causal, window=window)[None, None]
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             correction = jnp.exp(m - m_new)
             l_new = l * correction + jnp.sum(p, axis=-1)
-            acc_new = acc * correction[..., None] + jnp.einsum(
-                "bhqk,bhkd->bhqd", p.astype(vb_r.dtype), vb_r,
-                preferred_element_type=jnp.float32,
-            )
+            if n_rep > 1:
+                pg = p.reshape(b, kvh, n_rep, q_block, kb_len)
+                pv = jnp.einsum("bgrqk,bgkd->bgrqd", pg.astype(vb.dtype), vb,
+                                preferred_element_type=jnp.float32,
+                                ).reshape(b, h, q_block, hd)
+            else:
+                pv = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+                                preferred_element_type=jnp.float32)
+            acc_new = acc * correction[..., None] + pv
             return (m_new, l_new, acc_new), None
 
         init = (
@@ -206,26 +220,51 @@ def _make_blockwise(causal: bool, scale: float, q_block: int, kv_block: int,
 
             def per_kvblock(dq, ki):
                 (kb, vb, kpb, dk_a, dv_a) = ki
-                kb_r = jnp.repeat(kb, n_rep, axis=1) if n_rep > 1 else kb
-                vb_r = jnp.repeat(vb, n_rep, axis=1) if n_rep > 1 else vb
-                s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb_r,
-                               preferred_element_type=jnp.float32) * scale
-                s = s + _mask_bias(qpb, kpb, causal=causal, window=window)[None, None]
-                p = jnp.exp(s - lseb[..., None])  # (b,h,qb,kb) f32
+                kb_len = kb.shape[2]
                 gf = gb
-                dv_blk = jnp.einsum("bhqk,bhqd->bhkd", p.astype(gf.dtype), gf,
-                                    preferred_element_type=jnp.float32)
-                dp = jnp.einsum("bhqd,bhkd->bhqk", gf, vb_r,
-                                preferred_element_type=jnp.float32)
-                ds = p * (dp - db[..., None]) * scale
-                dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds.astype(kb_r.dtype), kb_r,
-                                     preferred_element_type=jnp.float32)
-                dk_blk = jnp.einsum("bhqk,bhqd->bhkd", ds.astype(qb.dtype), qb,
-                                    preferred_element_type=jnp.float32)
                 if n_rep > 1:
-                    kb_sh = dk_blk.shape
-                    dk_blk = dk_blk.reshape(b, kvh, n_rep, *kb_sh[2:]).sum(axis=2)
-                    dv_blk = dv_blk.reshape(b, kvh, n_rep, *kb_sh[2:]).sum(axis=2)
+                    # grouped einsums at the native KV head count: the r axis
+                    # contracts away in the dk/dv products, so the group sum
+                    # happens inside the einsum — no repeated block, no
+                    # post-hoc reshape-sum
+                    qg = qb.reshape(b, kvh, n_rep, q_block, hd)
+                    gg = gf.reshape(b, kvh, n_rep, q_block, hd)
+                    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, kb,
+                                   preferred_element_type=jnp.float32,
+                                   ).reshape(b, h, q_block, kb_len) * scale
+                    s = s + _mask_bias(qpb, kpb, causal=causal,
+                                       window=window)[None, None]
+                    p = jnp.exp(s - lseb[..., None])  # (b,h,qb,kb) f32
+                    pg = p.reshape(b, kvh, n_rep, q_block, kb_len)
+                    dv_blk = jnp.einsum("bgrqk,bgrqd->bgkd", pg.astype(gf.dtype),
+                                        gg, preferred_element_type=jnp.float32)
+                    dp = jnp.einsum("bgrqd,bgkd->bgrqk", gg, vb,
+                                    preferred_element_type=jnp.float32,
+                                    ).reshape(b, h, q_block, kb_len)
+                    ds = p * (dp - db[..., None]) * scale
+                    dsg = ds.reshape(b, kvh, n_rep, q_block, kb_len)
+                    dq = dq + jnp.einsum("bgrqk,bgkd->bgrqd",
+                                         dsg.astype(kb.dtype), kb,
+                                         preferred_element_type=jnp.float32,
+                                         ).reshape(b, h, q_block, hd)
+                    dk_blk = jnp.einsum("bgrqk,bgrqd->bgkd",
+                                        dsg.astype(qb.dtype), qg,
+                                        preferred_element_type=jnp.float32)
+                else:
+                    s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb,
+                                   preferred_element_type=jnp.float32) * scale
+                    s = s + _mask_bias(qpb, kpb, causal=causal,
+                                       window=window)[None, None]
+                    p = jnp.exp(s - lseb[..., None])  # (b,h,qb,kb) f32
+                    dv_blk = jnp.einsum("bhqk,bhqd->bhkd", p.astype(gf.dtype),
+                                        gf, preferred_element_type=jnp.float32)
+                    dp = jnp.einsum("bhqd,bhkd->bhqk", gf, vb,
+                                    preferred_element_type=jnp.float32)
+                    ds = p * (dp - db[..., None]) * scale
+                    dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds.astype(kb.dtype),
+                                         kb, preferred_element_type=jnp.float32)
+                    dk_blk = jnp.einsum("bhqk,bhqd->bhkd", ds.astype(qb.dtype),
+                                        qb, preferred_element_type=jnp.float32)
                 return dq, (dk_a + dk_blk, dv_a + dv_blk)
 
             dq0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
@@ -368,10 +407,13 @@ def attention_blockwise_triangular(q, k, v, q_pos, k_pos, *, window=None,
 
 
 def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
-                          kv_block):
-    """Adapter onto the registry's flash-attention Pallas kernel: repeat KV
-    heads (GQA — a jnp broadcast, so autodiff folds dk/dv back onto the KV
-    heads), fold heads into batch, dispatch, unfold.
+                          kv_block, k_scale=None, v_scale=None):
+    """Adapter onto the registry's flash-attention Pallas kernel: fold heads
+    into batch (batch-major, head = kv_head * n_rep + rep), dispatch, unfold.
+    K/V stay at their NATIVE head count — the kernel's kv ``index_map``
+    routes each query head's grid steps into its group's KV row, so the
+    cache-sized ``repeat_kv`` copy the old adapter paid per call never
+    exists; the kernel's rep-aware transposed grid group-sums dk/dv.
 
     CONTRACT: positions must be contiguous ranges (q row i at
     ``q_pos[0] + i``, key j at ``k_pos[0] + j``) whenever they matter
@@ -381,17 +423,20 @@ def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
     ``policy.pin("attention", "jnp", reason=...)`` around the call.  For
     decode (sq != sk) the kernel gets the query offset, and under causal
     masking a ``kv_len`` so KV blocks past the attended prefix are skipped
-    instead of computed-then-masked."""
+    instead of computed-then-masked.  ``k_scale``/``v_scale`` — per
+    (batch, kv_head) f32, paired with an int8 k/v — ride to the kernel's
+    in-block dequant."""
     from repro.kernels import registry
 
     b, sq, h, hd = q.shape
     sk = k.shape[1]
     kvh = k.shape[2]
-    k = repeat_kv(k, h // kvh)
-    v = repeat_kv(v, h // kvh)
 
     def fold(x):
-        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
+        return x.transpose(0, 2, 1, 3).reshape(b * x.shape[2], x.shape[1], hd)
+
+    def fold_scale(s):
+        return None if s is None else jnp.asarray(s, jnp.float32).reshape(b * kvh)
 
     if sq == sk:
         q_offset = kv_len = None  # zero-offset self-attention: static path
@@ -402,11 +447,17 @@ def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
     # forward overrides only when divisor-exact; else the per-shape plan wins
     qb = q_block if (q_block and sq % min(q_block, sq) == 0) else None
     kb = kv_block if (kv_block and sk % min(kv_block, sk) == 0) else None
+    kwargs = {}
+    if kvh != h:
+        kwargs["n_heads"] = h
+    if k_scale is not None:
+        kwargs["k_scale"] = fold_scale(k_scale)
+        kwargs["v_scale"] = fold_scale(v_scale)
     out = registry.dispatch(
         "attention", fold(q), fold(k), fold(v), causal=causal,
         window=0 if window is None else int(window),
         q_offset=q_offset, kv_len=kv_len, impl="pallas",
-        q_block=qb, kv_block=kb,
+        q_block=qb, kv_block=kb, **kwargs,
     )
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
 
@@ -414,7 +465,7 @@ def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
 def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=None,
               use_banded_local: bool = False, block_threshold: int = 2048,
               q_block: int = 512, kv_block: int = 1024,
-              causal_block_skip: bool = False):
+              causal_block_skip: bool = False, k_scale=None, v_scale=None):
     """Dispatch: dense for small/decode, blockwise for long, banded for local,
     triangular for causal long self-attention when block-skip is enabled.
 
@@ -431,7 +482,12 @@ def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=
     satisfies this — the ring-buffer exception pins itself to jnp);
     cross-attention with meaningless positions is fine too since it is
     non-causal/unwindowed.  Banded-local is a model-level algorithm choice,
-    so it stays on its jnp path regardless of the resolved backend."""
+    so it stays on its jnp path regardless of the resolved backend.
+
+    ``k_scale``/``v_scale`` — per-(batch, kv_head) f32, paired with an int8
+    ``k``/``v`` — reach the kernel's in-block dequant on the pallas route;
+    every jnp route dequantizes up front (cache-sized f32 copy: the oracle
+    pays what the kernel avoids, which is the point of the kernel)."""
     from repro.kernels import registry
 
     sq, sk = q.shape[1], k.shape[1]
@@ -440,7 +496,11 @@ def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=
     if impl == "pallas" and not use_banded_local:
         return _attention_via_kernel(q, k, v, q_pos, k_pos, causal=causal,
                                      window=window, q_block=q_block,
-                                     kv_block=kv_block)
+                                     kv_block=kv_block, k_scale=k_scale,
+                                     v_scale=v_scale)
+    if k_scale is not None:
+        k = (k.astype(jnp.float32) * k_scale[:, None, :, None]).astype(q.dtype)
+        v = (v.astype(jnp.float32) * v_scale[:, None, :, None]).astype(q.dtype)
     if window is not None and use_banded_local and sq == sk and sq > 2 * max(window, 128):
         return attention_banded_local(q, k, v, q_pos, k_pos, window=window,
                                       softmax_scale=softmax_scale)
@@ -454,6 +514,37 @@ def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=
     return attention_blockwise(q, k, v, q_pos, k_pos, causal=causal, window=window,
                                softmax_scale=softmax_scale, q_block=q_block,
                                kv_block=kv_block)
+
+
+# ---------------------------------------------------------------------------
+# quantized KV cache (the attention kv_dtype variant)
+# ---------------------------------------------------------------------------
+
+def kv_cache_dtype(default):
+    """The serving KV-cache dtype under the ambient policy: an attention
+    ``kv_dtype`` variant (``--impl 'attention=pallas:kv_dtype=int8'``)
+    selects the int8 cache; anything else keeps ``default``.  Returns
+    ``(dtype, quantized)``."""
+    from repro.kernels import policy
+
+    name = policy.current().variant_for("attention").get("kv_dtype")
+    if name in ("int8", "i8"):
+        return jnp.int8, True
+    return default, False
+
+
+def kv_scale(x):
+    """Per-(batch, kv_head) symmetric int8 scale for a (b, s, kvh, hd) k or v
+    slab: absmax / 127, floored so an all-zero head still divides cleanly."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 3))  # (b, kvh)
+    return jnp.maximum(amax / 127.0, 1e-8)
+
+
+def quantize_kv(x, scale):
+    """Quantize a (b, s, kvh, hd) slab to int8 with the per-(b, kvh)
+    ``scale`` (see :func:`kv_scale`); round-to-nearest, clipped."""
+    q = jnp.round(x.astype(jnp.float32) / scale[:, None, :, None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
 
 
 # ---------------------------------------------------------------------------
@@ -474,6 +565,44 @@ def project(x, w):
                                 impl="pallas")
         return out.reshape(*lead, w.shape[-1])
     return jnp.einsum("...d,df->...f", x, w)
+
+
+def qkv_project(x, wq, wk, wv):
+    """The attention-block input projections, policy-fusable: under a
+    ``qkv_fused`` variant on the matmul op (``--impl
+    'matmul=pallas:qkv_fused=true'`` or ``RunOptions.fused_qkv``) the three
+    per-block projections collapse into ONE ``(d, hq+hk+hv)`` matmul over
+    concatenated weights — one planned kernel launch streaming ``x`` once
+    instead of three launches streaming it three times — then split back.
+    Without the variant: three :func:`project` calls (each still
+    policy-routed).  Numerically identical either way (same contractions,
+    independent output columns)."""
+    from repro.kernels import policy
+
+    if policy.current().variant_for("matmul").get("qkv_fused"):
+        w = jnp.concatenate([wq, wk, wv], axis=1)
+        fused = project(x, w)
+        q, k, v = jnp.split(fused, [wq.shape[1], wq.shape[1] + wk.shape[1]],
+                            axis=-1)
+        return q, k, v
+    return project(x, wq), project(x, wk), project(x, wv)
+
+
+def attn_out_project(o, wo):
+    """Attention epilogue: (b, s, h, hd) heads -> (b, s, d) through the
+    output projection, without materializing the flattened (b*s, h*hd)
+    reshape as a separate tensor on the jnp route.  The pallas route folds
+    the head axes into the registry matmul's contraction dim (one planned
+    kernel, the fold is free — same buffer); the jnp route contracts the
+    head axes directly in the einsum."""
+    b, s, h, hd = o.shape
+    from repro.kernels import registry
+
+    if registry.resolve("matmul") == "pallas":
+        out = registry.dispatch("matmul", o.reshape(b * s, h * hd),
+                                wo.reshape(h * hd, -1), impl="pallas")
+        return out.reshape(b, s, -1)
+    return jnp.einsum("bshd,hdf->bsf", o, wo.reshape(h, hd, -1))
 
 
 def expert_project(h, w):

@@ -98,18 +98,23 @@ class DenseLM(Model):
 
     # -- shared layer body ---------------------------------------------------
     def _attn(self, pl, x, q_pos, k_pos, window, theta, k_cache=None, v_cache=None,
-              write_at=None):
+              write_at=None, k_scale=None, v_scale=None):
         """Attention sub-block.  If caches given, write k/v at ``write_at`` and
-        attend over the cache; else self-attention over x."""
+        attend over the cache; else self-attention over x.
+
+        An int8 cache (the policy's attention ``kv_dtype`` variant, see
+        ``init_cache``) carries per-(batch, kv_head) scales: prefill
+        calibrates them from the fresh k/v (and attends the exact fp values,
+        so prefill logits match the fp cache bit-for-bit); decode quantizes
+        the step's k/v with the stored scales and attends the int8 cache —
+        the kernel dequantizes inside the block load."""
         cfg = self.cfg
         b, s, d = x.shape
         hd = cfg.head_dim_
         h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
-        # QKV through the registry-resolving projection (ambient policy picks
-        # the backend; jnp resolves to the same einsum as before)
-        q = common.project(h, pl["wq"])
-        k = common.project(h, pl["wk"])
-        v = common.project(h, pl["wv"])
+        # QKV through the registry-resolving projections; one fused
+        # (d, q+k+v) matmul under the policy's qkv_fused variant
+        q, k, v = common.qkv_project(h, pl["wq"], pl["wk"], pl["wv"])
         if cfg.qkv_bias:
             q, k, v = q + pl["bq"], k + pl["bk"], v + pl["bv"]
         q = common.constrain(q.reshape(b, s, cfg.n_heads, hd), "batch", "*", "heads", "*")
@@ -121,11 +126,20 @@ class DenseLM(Model):
         q = common.apply_rope(q, q_pos, theta)
         k = common.apply_rope(k, q_pos, theta)
 
+        quantized = k_cache is not None and k_cache.dtype == jnp.int8
+        if quantized and s > 1:
+            # prefill: calibrate the per-(b, kvh) scales on the real k/v
+            k_scale, v_scale = common.kv_scale(k), common.kv_scale(v)
         if k_cache is not None:
-            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, write_at, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, write_at, axis=1)
+            kw = common.quantize_kv(k, k_scale) if quantized else k
+            vw = common.quantize_kv(v, v_scale) if quantized else v
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kw, write_at, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vw, write_at, axis=1)
+        att_scales = {}
         if k_cache is not None and s == 1:
             k_att, v_att = k_cache, v_cache  # decode: attend over the cache
+            if quantized:
+                att_scales = {"k_scale": k_scale, "v_scale": v_scale}
         else:
             k_att, v_att, k_pos = k, v, q_pos  # train/prefill: fresh k/v
 
@@ -137,9 +151,11 @@ class DenseLM(Model):
             q_block=self.opts.q_block, kv_block=self.opts.kv_block,
             # active whenever we attend over fresh k/v (train AND prefill)
             causal_block_skip=self.opts.causal_block_skip and s > 1,
+            **att_scales,
         )
-        o = common.project(o.reshape(b, s, cfg.q_dim), pl["wo"])
-        return x + common.constrain(o, "batch", "seq", "*"), (k_cache, v_cache)
+        o = common.attn_out_project(o, pl["wo"])
+        return (x + common.constrain(o, "batch", "seq", "*"),
+                (k_cache, v_cache, k_scale, v_scale))
 
     def _ffn(self, pl, x):
         cfg = self.cfg
@@ -157,8 +173,10 @@ class DenseLM(Model):
 
     # -- forward (training) --------------------------------------------------
     def _backbone(self, params, tokens, q_pos, k_pos, *, caches=None, write_at=None):
-        """Runs the layer stack.  caches: optional (k,v) stacked (L,b,S,K,hd).
-        Returns (hidden, new_caches, aux_sum)."""
+        """Runs the layer stack.  caches: optional stacked (k, v) — each
+        (L,b,S,K,hd) — optionally followed by (k_scale, v_scale) stacked
+        (L,b,K) when the cache is quantized.  Returns (hidden, new_caches,
+        aux_sum)."""
         cfg = self.cfg
         x = common.embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
         x = common.constrain(x, "batch", "seq", "*")
@@ -170,9 +188,11 @@ class DenseLM(Model):
 
         def layer_fn(carry, xs):
             x, aux = carry
+            ks = vs = kc = vc = None
             if caches is None:
                 pl, window, theta = xs
-                kc = vc = None
+            elif len(caches) == 4:
+                pl, window, theta, kc, vc, ks, vs = xs
             else:
                 pl, window, theta, kc, vc = xs
             if cfg.sliding_window is None:
@@ -180,10 +200,16 @@ class DenseLM(Model):
                 # the static fact "no window" must stay static — it gates the
                 # (static-kwarg) Pallas attention route in common.attention
                 window = None
-            x, (kc2, vc2) = self._attn(pl, x, q_pos, k_pos, window, theta,
-                                       k_cache=kc, v_cache=vc, write_at=write_at)
+            x, (kc2, vc2, ks2, vs2) = self._attn(
+                pl, x, q_pos, k_pos, window, theta, k_cache=kc, v_cache=vc,
+                write_at=write_at, k_scale=ks, v_scale=vs)
             x, a = self._ffn(pl, x)
-            ys = None if caches is None else (kc2, vc2)
+            if caches is None:
+                ys = None
+            elif len(caches) == 4:
+                ys = (kc2, vc2, ks2, vs2)
+            else:
+                ys = (kc2, vc2)
             return (x, aux + a), ys
 
         layer_fn = maybe_remat(layer_fn, self.opts) if caches is None else layer_fn
@@ -211,12 +237,35 @@ class DenseLM(Model):
 
     # -- inference -----------------------------------------------------------
     def init_cache(self, batch_size, max_len):
+        """KV cache, optionally quantized: under the policy's attention
+        ``kv_dtype=int8`` variant the k/v slabs are int8 with per-layer
+        per-(batch, kv_head) f32 scales stored alongside (calibrated at
+        prefill) — a quarter of the cache bytes, dequantized inside the
+        attention kernel's block load."""
         cfg = self.cfg
         shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim_)
-        return {
-            "k": jnp.zeros(shape, cfg.activation_dtype),
-            "v": jnp.zeros(shape, cfg.activation_dtype),
+        dtype, quantized = common.kv_cache_dtype(cfg.activation_dtype)
+        cache = {
+            "k": jnp.zeros(shape, dtype),
+            "v": jnp.zeros(shape, dtype),
         }
+        if quantized:
+            sshape = (cfg.n_layers, batch_size, cfg.n_kv_heads)
+            cache["k_scale"] = jnp.ones(sshape, jnp.float32)
+            cache["v_scale"] = jnp.ones(sshape, jnp.float32)
+        return cache
+
+    @staticmethod
+    def _cache_tuple(cache):
+        if "k_scale" in cache:
+            return (cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+        return (cache["k"], cache["v"])
+
+    @staticmethod
+    def _cache_dict(ys):
+        if len(ys) == 4:
+            return {"k": ys[0], "v": ys[1], "k_scale": ys[2], "v_scale": ys[3]}
+        return {"k": ys[0], "v": ys[1]}
 
     def prefill(self, params, batch, max_len):
         cfg = self.cfg
@@ -225,11 +274,12 @@ class DenseLM(Model):
         q_pos = jnp.arange(s, dtype=jnp.int32)
         k_pos = jnp.arange(max_len, dtype=jnp.int32)
         cache = self.init_cache(b, max_len)
-        x, (kc, vc), _ = self._backbone(
-            params, tokens, q_pos, k_pos, caches=(cache["k"], cache["v"]), write_at=0
+        x, ys, _ = self._backbone(
+            params, tokens, q_pos, k_pos, caches=self._cache_tuple(cache),
+            write_at=0
         )
         logits = common.logits_matmul(x[:, -1], self._out_embed(params))
-        return logits, {"k": kc, "v": vc}
+        return logits, self._cache_dict(ys)
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
         cfg = self.cfg
@@ -237,8 +287,9 @@ class DenseLM(Model):
         max_len = cache["k"].shape[2]
         q_pos = jnp.full((1,), pos, jnp.int32)
         k_pos = jnp.arange(max_len, dtype=jnp.int32)
-        x, (kc, vc), _ = self._backbone(
-            params, tokens, q_pos, k_pos, caches=(cache["k"], cache["v"]), write_at=pos
+        x, ys, _ = self._backbone(
+            params, tokens, q_pos, k_pos, caches=self._cache_tuple(cache),
+            write_at=pos
         )
         logits = common.logits_matmul(x[:, -1], self._out_embed(params))
-        return logits, {"k": kc, "v": vc}
+        return logits, self._cache_dict(ys)

@@ -64,9 +64,17 @@ class EncDecLM(Model):
         b, sq, _ = xq.shape
         sk = xkv.shape[1]
         hd = cfg.head_dim_
-        q = common.project(xq, pa["wq"]).reshape(b, sq, cfg.n_heads, hd)
-        k = common.project(xkv, pa["wk"]).reshape(b, sk, cfg.n_kv_heads, hd)
-        v = common.project(xkv, pa["wv"]).reshape(b, sk, cfg.n_kv_heads, hd)
+        if xq is xkv:
+            # self-attention: policy-fusable single QKV matmul
+            q, k, v = common.qkv_project(xq, pa["wq"], pa["wk"], pa["wv"])
+        else:
+            # cross-attention: q and k/v read different activations
+            q = common.project(xq, pa["wq"])
+            k = common.project(xkv, pa["wk"])
+            v = common.project(xkv, pa["wv"])
+        q = q.reshape(b, sq, cfg.n_heads, hd)
+        k = k.reshape(b, sk, cfg.n_kv_heads, hd)
+        v = v.reshape(b, sk, cfg.n_kv_heads, hd)
         q = common.constrain(q, "batch", "*", "heads", "*")
         k = common.constrain(k, "batch", "*", "kv_heads", "*")
         v = common.constrain(v, "batch", "*", "kv_heads", "*")
@@ -88,7 +96,7 @@ class EncDecLM(Model):
             o = common.attention(q, k, v, pos, pos, causal=False,
                                  block_threshold=max(self.opts.q_block, self.opts.kv_block))
             x = x + common.constrain(
-                common.project(o.reshape(x.shape[0], s, cfg.q_dim), pl["attn"]["wo"]),
+                common.attn_out_project(o, pl["attn"]["wo"]),
                 "batch", "seq", "*")
             h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
             x = x + common.gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
@@ -122,7 +130,7 @@ class EncDecLM(Model):
             o = common.attention(q, k, v, q_pos, k_pos, causal=True,
                                  block_threshold=max(self.opts.q_block, self.opts.kv_block))
             x = x + common.constrain(
-                common.project(o.reshape(b, s, cfg.q_dim), pl["self_attn"]["wo"]),
+                common.attn_out_project(o, pl["self_attn"]["wo"]),
                 "batch", "seq", "*")
 
             # cross attention
@@ -141,7 +149,7 @@ class EncDecLM(Model):
                                      jnp.zeros((enc_out.shape[1],), jnp.int32), causal=False,
                                      block_threshold=max(self.opts.q_block, self.opts.kv_block))
             x = x + common.constrain(
-                common.project(o.reshape(b, s, cfg.q_dim), pl["cross_attn"]["wo"]),
+                common.attn_out_project(o, pl["cross_attn"]["wo"]),
                 "batch", "seq", "*")
 
             h = common.rms_norm(x, pl["ln3"], cfg.norm_eps)

@@ -155,9 +155,10 @@ class HybridLM(Model):
         b, s, d = x.shape
         hd = cfg.head_dim_
         h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
-        q = common.project(h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
-        k = common.project(h, pl["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
-        v = common.project(h, pl["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        q, k, v = common.qkv_project(h, pl["wq"], pl["wk"], pl["wv"])
+        q = q.reshape(b, s, cfg.n_heads, hd)
+        k = k.reshape(b, s, cfg.n_kv_heads, hd)
+        v = v.reshape(b, s, cfg.n_kv_heads, hd)
         q = common.constrain(q, "batch", "*", "heads", "*")
         k = common.constrain(k, "batch", "*", "kv_heads", "*")
         v = common.constrain(v, "batch", "*", "kv_heads", "*")
@@ -201,9 +202,8 @@ class HybridLM(Model):
                                  window=cfg.sliding_window,
                                  use_banded_local=self.opts.use_banded_local and kc is None,
                                  block_threshold=max(self.opts.q_block, self.opts.kv_block))
-        x = x + common.constrain(
-            common.project(o.reshape(b, s, cfg.q_dim), pl["wo"]),
-            "batch", "seq", "*")
+        x = x + common.constrain(common.attn_out_project(o, pl["wo"]),
+                                 "batch", "seq", "*")
         h2 = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
         x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"])
         return x, (kc, vc)

@@ -72,9 +72,10 @@ class VisionLM(Model):
         b, s, _ = x.shape
         hd = cfg.head_dim_
         h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
-        q = common.project(h, pl["wq"]).reshape(b, s, cfg.n_heads, hd)
-        k = common.project(h, pl["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
-        v = common.project(h, pl["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        q, k, v = common.qkv_project(h, pl["wq"], pl["wk"], pl["wv"])
+        q = q.reshape(b, s, cfg.n_heads, hd)
+        k = k.reshape(b, s, cfg.n_kv_heads, hd)
+        v = v.reshape(b, s, cfg.n_kv_heads, hd)
         q = common.constrain(q, "batch", "*", "heads", "*")
         k = common.constrain(k, "batch", "*", "kv_heads", "*")
         v = common.constrain(v, "batch", "*", "kv_heads", "*")
@@ -86,7 +87,7 @@ class VisionLM(Model):
             k, v = kc, vc
         o = common.attention(q, k, v, q_pos, k_pos, causal=True,
                              block_threshold=max(self.opts.q_block, self.opts.kv_block))
-        o = common.constrain(common.project(o.reshape(b, s, cfg.q_dim), pl["wo"]),
+        o = common.constrain(common.attn_out_project(o, pl["wo"]),
                              "batch", "seq", "*")
         x = x + o
         h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
@@ -105,7 +106,7 @@ class VisionLM(Model):
         q_pos = jnp.zeros((s,), jnp.int32)
         k_pos = jnp.zeros((n_img,), jnp.int32)
         o = common.attention_dense(q, img_k, img_v, q_pos, k_pos, causal=False)
-        o = common.constrain(common.project(o.reshape(b, s, cfg.q_dim), pl["wo"]),
+        o = common.constrain(common.attn_out_project(o, pl["wo"]),
                              "batch", "seq", "*")
         x = x + jnp.tanh(pl["xgate_attn"].astype(jnp.float32)).astype(x.dtype) * o
         h = common.rms_norm(x, pl["ln2"], cfg.norm_eps)

@@ -158,6 +158,49 @@ def test_impl_grammar():
         policy.parse_impl_arg("attnetion=pallas")  # typo'd op must not no-op
 
 
+def test_impl_grammar_variant_knobs():
+    """The variants extension: ``op=backend:knob=value`` entries carry typed
+    per-op knobs alongside the impl map."""
+    impl, variants = policy.parse_impl_spec("attention=pallas:kv_dtype=int8")
+    assert impl == {"attention": "pallas"}
+    assert variants == {"attention": {"kv_dtype": "int8"}}
+    impl, variants = policy.parse_impl_spec(
+        "matmul=pallas:backend=classical:qkv_fused=true,attention=jnp")
+    assert impl == {"matmul": "pallas", "attention": "jnp"}
+    assert variants == {"matmul": {"backend": "classical",
+                                   "qkv_fused": True}}  # typed: bool
+    _, variants = policy.parse_impl_spec("scan=pallas:block=128")
+    assert variants == {"scan": {"block": 128}}  # typed: int
+    # back-compat: the impl-only parser accepts knobs and drops them
+    assert policy.parse_impl_arg("attention=pallas:kv_dtype=int8") == {
+        "attention": "pallas"}
+    with pytest.raises(ValueError, match="wildcard"):
+        policy.parse_impl_spec("*=pallas:kv_dtype=int8")
+    with pytest.raises(ValueError, match="knob=value"):
+        policy.parse_impl_spec("attention=pallas:kv_dtype")
+
+
+def test_describe_round_trips_variants():
+    """describe()'s impl/variant prefix parses back to the same dispatch
+    decisions (knob order and bool casing normalize)."""
+    spec = "attention=pallas:kv_dtype=int8,matmul=pallas:qkv_fused=true"
+    impl, variants = policy.parse_impl_spec(spec)
+    pol = policy.ExecutionPolicy(impl=impl, variants=variants)
+    rendered = pol.describe()
+    impl2, variants2 = policy.parse_impl_spec(rendered)
+    assert impl2 == dict(impl)
+    assert variants2 == {op: dict(k) for op, k in variants.items()}
+
+
+def test_ambient_env_carries_variants(monkeypatch):
+    monkeypatch.setenv("REPRO_IMPL", "attention=pallas:kv_dtype=int8")
+    amb = policy.ambient()
+    assert amb.impl_for("attention") == "pallas"
+    assert amb.variant_for("attention") == {"kv_dtype": "int8"}
+    monkeypatch.delenv("REPRO_IMPL")
+    assert policy.ambient().variant_for("attention") == {}
+
+
 # -- resolver capability gates ------------------------------------------------
 
 def test_resolve_capability_gates():

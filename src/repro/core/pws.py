@@ -18,6 +18,28 @@ import math
 from typing import Optional
 
 
+def match_round(idle, heads):
+    """One §4.7 distributed-matching round, as data: ``idle`` is a list of
+    ``(rank, thief)`` pairs (rank = arrival order; ties by thief index) and
+    ``heads`` a list of ``(victim, priority-or-None)`` queue heads.  Returns
+    ``(best_priority, [(idle_pair, victim), ...])`` — the idle entries sorted
+    by rank matched positionally to the victims holding the round's (max)
+    priority, victims by index — or ``(None, [])`` when nothing is stealable.
+
+    This is the deterministic core both the simulated-machine scheduler
+    (:class:`PWS`) and the serving engine's slot scheduler
+    (``repro.launch.engine.SlotScheduler``) run their rounds through:
+    requests are tasks, idle decode slots are thieves, priority = work
+    remaining.  The caller owns the round-boundary rules (advertised-bound
+    deferral here; the bounded-steals cap in the engine)."""
+    live = [(v, pr) for v, pr in heads if pr is not None]
+    if not live or not idle:
+        return None, []
+    best = max(pr for _, pr in live)
+    victims = [v for v, pr in live if pr == best]
+    return best, list(zip(sorted(idle), victims))
+
+
 class PWS:
     def __init__(self, steal_cost: Optional[float] = None):
         self.steal_cost = steal_cost
@@ -47,12 +69,9 @@ class PWS:
         on the task it may yet generate, and the round DEFERS if that bound
         exceeds the best available head."""
         while self.idle:
-            # the round's priority: max over all queue heads
-            best: Optional[int] = None
-            for v in range(machine.p):
-                pr = machine.head_priority(v)
-                if pr is not None and (best is None or pr > best):
-                    best = pr
+            # the round's priority and pairing via the shared §4.7 round
+            heads = [(v, machine.head_priority(v)) for v in range(machine.p)]
+            best, pairs = match_round(self.idle, heads)
             if best is None:
                 return
             # advertised upper bounds from busy cores with empty queues
@@ -62,21 +81,12 @@ class PWS:
                     adv = machine.prog.priority(node) - 1
                     if adv > best:
                         return  # round priority not yet determined — wait
-            # victims holding a head of the round priority, by index
-            victims = [v for v in range(machine.p)
-                       if machine.head_priority(v) == best]
-            if not victims:
-                return
-            self.idle.sort()
             matched = 0
-            for v in victims:
-                if not self.idle:
-                    break
-                since, thief = self.idle.pop(0)
+            for (since, thief), v in pairs:
                 node = machine.steal_from(v)
                 if node is None:
-                    self.idle.append((since, thief))
-                    continue
+                    continue  # failed steal: thief stays idle for next round
+                self.idle.remove((since, thief))
                 machine.stats.steal_attempts += 1
                 machine.stats.steals.append((t, best, thief, v))
                 machine.assign_stolen(thief, node, max(t, since) + self.sp)

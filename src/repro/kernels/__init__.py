@@ -42,6 +42,14 @@ points, each in exactly one module:
     ``KernelSpec``; the ``attention`` kernel covers cached decode via
     ``q_offset``/``kv_len`` and registers a recomputation backward, so
     serving prefill/decode and training all dispatch through one path.
+    Both decode operands also take per-row ``(rows,)`` vectors — ``rows``
+    dividing the folded batch*heads axis, each row's scalar fanning out
+    over its ``bh // rows`` folded heads (the batch-major fold) — read
+    per-lane from SMEM, so one launch serves a continuous batch whose
+    slots sit at different cache depths: concrete vectors keep the
+    static grid shrink (to the max length), traced vectors keep the
+    no-recompile property across ragged batch compositions
+    (``launch.engine`` is the consumer).
     GQA is kernel-native: callers hand K/V over at their *native* head
     count with ``n_heads`` declaring the query head count, and the kv
     ``index_map`` routes every query head's grid steps into its group's KV

@@ -160,6 +160,22 @@ def startup(m: Optional[str] = None) -> str:
     return resolved
 
 
+def provenance() -> dict:
+    """Tuned-table provenance for startup logs and benchmark JSON: where the
+    replay table lives, whether it exists, and how many plans it holds for
+    this device kind — so a serving/benchmark number can always be traced
+    back to the exact tile table (or its absence) it ran with."""
+    dp = planner.device_params()
+    path = table_path(dp.kind)
+    return {
+        "mode": resolve_mode(None),
+        "device_kind": dp.kind,
+        "table": str(path),
+        "table_exists": path.exists(),
+        "tuned_plans": len(load_table(dp.kind)),
+    }
+
+
 # ---------------------------------------------------------------------------
 # table keys
 # ---------------------------------------------------------------------------

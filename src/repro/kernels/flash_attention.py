@@ -25,6 +25,18 @@ Cached decode (serving) is covered by two kwargs:
     the full grid and skips dead blocks with ``pl.when`` (no recompiles
     across decode steps).
 
+Both kwargs also accept a PER-ROW vector of shape ``(rows,)`` where ``rows``
+divides the folded batch-head count (``rows`` = the batch under the
+batch-major head fold) — the continuous-batching contract: each batch lane
+carries its own decode position and its own valid cache prefix, so cache
+slots at different depths coexist in one kernel launch.  The vectors live
+in SMEM; each grid step indexes its lane's scalars (``r = bh // hpb``), and
+a traced vector keeps the no-recompile property across decode steps of
+varying per-row lengths.  A *concrete* (numpy) vector still shrinks the KV
+grid to ``ceil(max(kv_len) / kv_block)`` blocks; shorter lanes skip their
+dead blocks with ``pl.when``.  A lane with ``kv_len == 0`` (nothing valid
+yet) emits zeros through the ``l_safe`` guard.
+
 A query row with every key masked (possible when ``window > 0`` and
 ``q_offset`` outruns ``kv_len``) returns zeros — masked probabilities are
 explicitly zeroed so the ``l`` accumulator stays 0 and the ``l_safe`` guard
@@ -125,7 +137,7 @@ def _run_kv_block(body, kb, kvlen, *, kv_block, full_len):
 def _flash_kernel(qoff_ref, kvlen_ref, *refs, scale: float, causal: bool,
                   window: int, q_block: int, kv_block: int, nk: int,
                   full_len: bool, decode, quantized: bool, h: int, kvh: int,
-                  n_rep: int):
+                  n_rep: int, hpb: int):
     if quantized:
         (kscale_ref, vscale_ref, q_ref, k_ref, v_ref,
          o_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
@@ -140,8 +152,10 @@ def _flash_kernel(qoff_ref, kvlen_ref, *refs, scale: float, causal: bool,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    qoff, kvlen = qoff_ref[0], kvlen_ref[0]
     b_, qi = decode(pl.program_id(0))
+    # per-row decode state: lane r = b_ // hpb (hpb = batch-heads per row;
+    # rows == 1 makes this the old shared-scalar read)
+    qoff, kvlen = qoff_ref[b_ // hpb], kvlen_ref[b_ // hpb]
 
     def _body():
         q = q_ref[0].astype(jnp.float32)  # (q_block, hd)
@@ -193,7 +207,7 @@ def _probs_from_lse(s, ok, lse):
 def _bwd_dq_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
                    delta_ref, dq_ref, dq_acc, *, scale: float, causal: bool,
                    window: int, q_block: int, kv_block: int, nk: int,
-                   full_len: bool, decode):
+                   full_len: bool, decode, hpb: int):
     """dq = sum over KV blocks of (P * (dO K^T... ) ) — same grid shape and
     schedule as the forward, accumulating dq in scratch.  GQA needs no body
     change here: the kv index map hands each query head its group's native
@@ -204,8 +218,8 @@ def _bwd_dq_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
     def _init():
         dq_acc[...] = jnp.zeros_like(dq_acc)
 
-    qoff, kvlen = qoff_ref[0], kvlen_ref[0]
-    _, qi = decode(pl.program_id(0))
+    b_, qi = decode(pl.program_id(0))
+    qoff, kvlen = qoff_ref[b_ // hpb], kvlen_ref[b_ // hpb]
 
     def _body():
         q = q_ref[0].astype(jnp.float32)
@@ -235,7 +249,7 @@ def _bwd_dq_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
 def _bwd_dkv_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
                     delta_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
                     causal: bool, window: int, q_block: int, kv_block: int,
-                    nq: int, n_rep: int, full_len: bool, decode):
+                    nq: int, n_rep: int, full_len: bool, decode, khpb: int):
     """dk/dv: the transposed sweep — outer grid over (kbh, nk) *native* KV
     tiles, inner loop over ``n_rep * nq`` (every q block of every query head
     in this KV head's group), accumulating (kv_block, hd) dk/dv in scratch —
@@ -250,8 +264,9 @@ def _bwd_dkv_kernel(qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, g_ref, lse_ref,
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
-    qoff, kvlen = qoff_ref[0], kvlen_ref[0]
-    _, kb = decode(pl.program_id(0))
+    b_, kb = decode(pl.program_id(0))
+    # lane index through the KV batch-head fold (khpb = kv batch-heads/row)
+    qoff, kvlen = qoff_ref[b_ // khpb], kvlen_ref[b_ // khpb]
 
     live = None if full_len else (kb * kv_block < kvlen)
     if causal:
@@ -311,12 +326,13 @@ def _gqa_geometry(q, k, n_heads: Optional[int]):
 
 
 def _fwd_call(q, k, v, qoff, kvlen, kscale, vscale, *, causal, window,
-              q_block, kv_block, nk_run, full_len, n_heads, interpret):
+              q_block, kv_block, nk_run, full_len, n_heads, rows, interpret):
     """Forward pallas_call: returns (out, lse)."""
     bh, sq, hd = q.shape
     nq = sq // q_block
     scale = 1.0 / math.sqrt(hd)
     h, kvh, n_rep = _gqa_geometry(q, k, n_heads)
+    hpb = bh // rows  # batch-heads per decode lane (rows == 1: one lane)
     quantized = kscale is not None
     # BI order over the flattened (bh, nq) outer grid; the KV dim stays the
     # trailing (contiguous) grid axis so the scratch combine is well-defined.
@@ -349,7 +365,8 @@ def _fwd_call(q, k, v, qoff, kvlen, kscale, vscale, *, causal, window,
         functools.partial(_flash_kernel, scale=scale, causal=causal,
                           window=window, q_block=q_block, kv_block=kv_block,
                           nk=nk_run, full_len=full_len, decode=decode,
-                          quantized=quantized, h=h, kvh=kvh, n_rep=n_rep),
+                          quantized=quantized, h=h, kvh=kvh, n_rep=n_rep,
+                          hpb=hpb),
         grid=(bh * nq, nk_run),
         in_specs=in_specs,
         out_specs=[pl.BlockSpec((1, q_block, hd), q_map),
@@ -366,7 +383,7 @@ def _fwd_call(q, k, v, qoff, kvlen, kscale, vscale, *, causal, window,
 
 
 def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
-              kv_block, nk_run, full_len, n_heads, interpret):
+              kv_block, nk_run, full_len, n_heads, rows, interpret):
     """Backward pallas_calls: dq over the forward's (q-outer, kv-inner) grid,
     dk/dv over the transposed (kv-outer, (rep, q)-inner) grid at the native
     KV head count."""
@@ -377,6 +394,8 @@ def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
     nk_full = sk // kv_block
     scale = 1.0 / math.sqrt(hd)
     h, kvh, n_rep = _gqa_geometry(q, k, n_heads)
+    hpb = bh // rows
+    khpb = kbh // rows  # kv batch-heads per decode lane
     delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
 
@@ -397,7 +416,8 @@ def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
     dq = pl.pallas_call(
         functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
                           window=window, q_block=q_block, kv_block=kv_block,
-                          nk=nk_run, full_len=full_len, decode=dec_q),
+                          nk=nk_run, full_len=full_len, decode=dec_q,
+                          hpb=hpb),
         grid=(bh * nq, nk_run),
         in_specs=[smem, smem,
                   pl.BlockSpec((1, q_block, hd), q_map),
@@ -440,7 +460,7 @@ def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
         functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
                           window=window, q_block=q_block, kv_block=kv_block,
                           nq=nq, n_rep=n_rep, full_len=full_len,
-                          decode=dec_kv),
+                          decode=dec_kv, khpb=khpb),
         grid=(kbh * nk_full, n_rep * nq),
         in_specs=[smem, smem,
                   pl.BlockSpec((1, q_block, hd), q_map_t),
@@ -463,13 +483,13 @@ def _bwd_call(q, k, v, qoff, kvlen, out, lse, g, *, causal, window, q_block,
 @functools.lru_cache(maxsize=None)
 def _flash_fn(causal: bool, window: int, q_block: int, kv_block: int,
               nk_run: int, full_len: bool, n_heads: Optional[int],
-              quantized: bool, interpret: bool):
+              rows: int, quantized: bool, interpret: bool):
     """custom-VJP flash attention for one static config, jitted so repeated
     eager calls (tests, benchmarks) reuse the lowered kernel.  The quantized
     (int8 KV + scales) variant is forward-only."""
     cfg = dict(causal=causal, window=window, q_block=q_block,
                kv_block=kv_block, nk_run=nk_run, full_len=full_len,
-               n_heads=n_heads, interpret=interpret)
+               n_heads=n_heads, rows=rows, interpret=interpret)
 
     if quantized:
         def fa_quant(q, k, v, qoff, kvlen, kscale, vscale):
@@ -519,6 +539,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     (keys at ``0..sk-1``); ``kv_len`` masks keys at positions >= it.  Both
     accept traced scalars (decode loops never recompile); a static ``kv_len``
     additionally shrinks the KV grid to ``ceil(kv_len / kv_block)`` blocks.
+    Both also accept per-row vectors of shape ``(rows,)`` with ``rows``
+    dividing ``bh`` and ``kbh`` (the continuous-batching contract, see the
+    module docstring): traced vectors never recompile across steps, concrete
+    (list/numpy) ``kv_len`` vectors shrink the grid to the longest lane.
     ``k_scale``/``v_scale`` (f32 ``(kbh,)``, paired with an int8 ``k``/``v``)
     dequantize per KV batch-head inside the kernel; the quantized path is
     forward-only.  Otherwise differentiable w.r.t. q/k/v via the registered
@@ -551,28 +575,59 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     _gqa_geometry(q, k, n_heads)  # validate early, outside the jit
     nk_full = sk // kv_block
 
-    if kv_len is None:
-        static_len: Optional[int] = sk
-    elif isinstance(kv_len, (int, np.integer)) and not isinstance(kv_len, bool):
-        static_len = max(min(int(kv_len), sk), 0)
-    else:
-        static_len = None  # traced: full grid, pl.when skips dead blocks
+    def _veclen(x):
+        if x is None or (isinstance(x, (int, np.integer))
+                         and not isinstance(x, bool)):
+            return 1
+        shp = jnp.shape(x)
+        if len(shp) > 1:
+            raise ValueError(f"q_offset/kv_len must be scalar or 1-D, got "
+                             f"shape {shp}")
+        return int(shp[0]) if shp else 1
 
-    if static_len is not None:
+    def _concrete(x):
+        """Host-known values as a numpy vector, else None (traced)."""
+        if isinstance(x, (int, np.integer)) and not isinstance(x, bool):
+            return np.asarray([int(x)], np.int64)
+        if isinstance(x, (list, tuple, np.ndarray)):
+            return np.asarray(x, np.int64).reshape(-1)
+        return None
+
+    # per-row lanes: rows = the common vector length of q_offset/kv_len
+    # (scalars broadcast); each lane owns bh/rows query heads in the fold
+    rows = max(_veclen(q_offset), _veclen(kv_len))
+    for name, x in (("q_offset", q_offset), ("kv_len", kv_len)):
+        if _veclen(x) not in (1, rows):
+            raise ValueError(f"{name} has {_veclen(x)} rows, expected 1 or "
+                             f"{rows}")
+    if bh % rows != 0 or k.shape[0] % rows != 0:
+        raise ValueError(f"per-row q_offset/kv_len of {rows} rows must "
+                         f"divide the folded batch-head counts "
+                         f"({bh}, {k.shape[0]})")
+
+    static_vals = (np.asarray([sk], np.int64) if kv_len is None
+                   else _concrete(kv_len))
+    if static_vals is not None:
+        vals = np.clip(static_vals, 0, sk)
+        # grid shrinks to the longest lane; shorter lanes pl.when-skip
+        static_len = int(vals.max())
         nk_run = max(-(-static_len // kv_block), 1)
-        kvlen_arr = jnp.full((1,), static_len, jnp.int32)
+        # static full coverage on EVERY lane: no validity mask — the plain
+        # self-attention config compiles to the pre-decode kernel body
+        full_len = int(vals.min()) >= sk
+        kvlen_arr = jnp.broadcast_to(jnp.asarray(vals, jnp.int32), (rows,))
     else:
-        nk_run = nk_full
-        kvlen_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
-    qoff_arr = jnp.asarray(0 if q_offset is None else q_offset,
-                           jnp.int32).reshape(1)
+        nk_run = nk_full  # traced: full grid, pl.when skips dead blocks
+        full_len = False
+        kvlen_arr = jnp.broadcast_to(
+            jnp.asarray(kv_len, jnp.int32).reshape(-1), (rows,))
+    qoff_arr = jnp.broadcast_to(
+        jnp.asarray(0 if q_offset is None else q_offset,
+                    jnp.int32).reshape(-1), (rows,))
 
-    # static full coverage: every KV block live and no validity mask — the
-    # plain self-attention config compiles to the pre-decode kernel body
-    full_len = static_len is not None and static_len >= sk
     fa = _flash_fn(bool(causal), int(window), q_block, kv_block, nk_run,
                    full_len, None if n_heads is None else int(n_heads),
-                   quantized, bool(interpret))
+                   rows, quantized, bool(interpret))
     if quantized:
         kbh = k.shape[0]
         return fa(q, k, v, qoff_arr, kvlen_arr,

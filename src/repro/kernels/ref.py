@@ -37,7 +37,11 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     Native-GQA twin of the kernel: ``kbh`` may be ``bh / n_rep`` with
     ``n_heads`` the per-batch query head count (batch-major fold, head =
     kv_head * n_rep + rep).  ``k_scale``/``v_scale`` (f32 ``(kbh,)``)
-    dequantize an int8 k/v per KV batch-head before the scores."""
+    dequantize an int8 k/v per KV batch-head before the scores.
+
+    ``q_offset``/``kv_len`` also accept per-row vectors ``(rows,)`` with
+    ``rows`` dividing ``bh`` (the continuous-batching contract): each lane
+    of ``bh // rows`` consecutive batch-heads masks its own positions."""
     bh, sq, hd = q.shape
     kbh, sk = k.shape[0], k.shape[1]
     scale = 1.0 / math.sqrt(hd)
@@ -58,25 +62,33 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
         s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, kg) * scale
     else:
         s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kf) * scale
-    qoff = 0 if q_offset is None else jnp.asarray(q_offset, jnp.int32).reshape(())
-    qp = qoff + jnp.arange(sq)[:, None]
-    kp = jnp.arange(sk)[None, :]
-    ok = jnp.ones((sq, sk), bool)
-    if kv_len is not None:
-        ok &= kp < jnp.asarray(kv_len, jnp.int32).reshape(())
+    qoffs = jnp.asarray(0 if q_offset is None else q_offset,
+                        jnp.int32).reshape(-1)
+    kvlens = (None if kv_len is None
+              else jnp.asarray(kv_len, jnp.int32).reshape(-1))
+    rows = max(qoffs.shape[0], 1 if kvlens is None else kvlens.shape[0])
+    assert bh % rows == 0, (bh, rows)
+    qp = (jnp.broadcast_to(qoffs, (rows,))[:, None, None]
+          + jnp.arange(sq)[None, :, None])
+    kp = jnp.arange(sk)[None, None, :]
+    ok = jnp.ones((rows, sq, sk), bool)
+    if kvlens is not None:
+        ok &= kp < jnp.broadcast_to(kvlens, (rows,))[:, None, None]
     if causal:
         ok &= kp <= qp
     if window > 0:
         ok &= kp > qp - window
-    any_ok = ok.any(axis=-1)  # (sq,)
+    # each lane covers bh // rows consecutive batch-heads of the fold
+    okb = jnp.repeat(ok, bh // rows, axis=0)      # (bh, sq, sk)
+    any_ok = okb.any(axis=-1)                     # (bh, sq)
     if kbh != bh:
-        s = jnp.where(ok[None, None, None], s, -1e30)
+        s = jnp.where(okb.reshape(b, kvh, n_rep, sq, sk), s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
-        p = jnp.where(any_ok[None, None, None, :, None], p, 0.0)
+        p = jnp.where(any_ok.reshape(b, kvh, n_rep, sq)[..., None], p, 0.0)
         vg = vf.reshape(b, kvh, sk, hd)
         out = jnp.einsum("bgrqk,bgkd->bgrqd", p, vg)
         return out.reshape(bh, sq, hd).astype(q.dtype)
-    s = jnp.where(ok[None], s, -1e30)
+    s = jnp.where(okb, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(any_ok[None, :, None], p, 0.0)
+    p = jnp.where(any_ok[:, :, None], p, 0.0)
     return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

@@ -1,0 +1,387 @@
+"""Continuous-batching serving engine: PWS-disciplined slot scheduling over
+per-row KV decode.
+
+The lockstep server (``repro.launch.serve``) decodes a fixed wave of
+requests at one shared position: rows that finish early burn decode steps
+until the slowest request in the wave ends, and a new wave cannot start
+until the old one drains.  This engine removes both stalls:
+
+* **Per-row KV lengths.**  Every decode step runs the whole ``max_batch``
+  at once, but each slot carries its OWN position — the flash-decode
+  kernel's per-row ``q_offset``/``kv_len`` SMEM vectors (see
+  ``repro.kernels.flash_attention``) mask each lane's cache prefix
+  independently, so caches at different depths coexist in one launch, and
+  the traced vectors keep the no-recompile property across steps of
+  varying per-row lengths.
+
+* **Slot reuse.**  A request that hits EOS / ``max_new`` / the cache
+  capacity releases its slot immediately (an *eviction*); the next queued
+  request is admitted into it without waiting for the rest of the batch.
+
+* **Chunked prefill.**  Prompts stream into the cache in fixed-size chunks
+  (``prefill_chunk`` on the model — first chunk attends its fresh k/v,
+  continuations attend the cache prefix), one chunk per engine iteration,
+  interleaved with decode steps so a long prompt never stalls in-flight
+  rows.  An int8 KV cache calibrates its scales on the first chunk.
+
+* **PWS slot scheduling.**  Admission is the paper's §4.7 priority-matching
+  discipline, run through the same ``core.pws.match_round`` the simulated
+  machine's scheduler uses: queued requests are stealable tasks, idle slots
+  are thieves, priority = work remaining (prompt tokens still to prefill +
+  tokens still to generate — the size-based order).  Rounds are
+  deterministic, match at most ``p - 1`` requests of the round's priority
+  (Obs. 4.3, asserted), and round priorities are non-increasing within a
+  drain (asserted).  The scheduler's match/steal/eviction counters are the
+  engine's telemetry.
+
+Numerics contract: with greedy decoding the engine's per-request tokens are
+IDENTICAL to running each request alone through the lockstep path (same
+jitted model functions, write-before-attend keeps parked rows harmless) —
+``tests/test_engine.py`` asserts this request-for-request, fp32 and int8.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pws
+from repro.core.sharding_hints import axis_rules
+from repro.launch.serve import Request, Server
+from repro.models.base import RunOptions
+
+log = logging.getLogger("repro.engine")
+
+
+class SlotScheduler:
+    """Deterministic slot↔request matcher on the PWS §4.7 round discipline.
+
+    One :meth:`assign` call drains as many matching rounds as the idle-slot
+    supply allows.  Each round goes through :func:`repro.core.pws.match_round`
+    — idle slots (thieves, ranked by slot index) matched positionally to the
+    queued requests holding the round's best priority (victims, by queue
+    index) — then enforces and ASSERTS the paper's bounds: at most ``p - 1``
+    matches per round (Obs. 4.3 at the round's priority; ``p`` = slot
+    count), and non-increasing round priorities within the drain (§4.1).
+    Counters double as the engine's telemetry.
+    """
+
+    def __init__(self, n_slots: int):
+        self.p = max(int(n_slots), 1)
+        self.counters = {
+            "matches": 0,        # requests admitted into slots (steals)
+            "rounds": 0,         # matching rounds run
+            "evictions": 0,      # slot releases (stop / capacity)
+            "max_round_matches": 0,
+        }
+
+    def assign(self, idle_slots, queue, priority):
+        """Match ``idle_slots`` to entries of ``queue`` (a sequence of
+        requests; ``priority(r)`` = work remaining).  Returns the matches as
+        ``[(slot, queue_index), ...]`` in match order; the caller admits and
+        pops.  Deterministic in its inputs."""
+        bound = max(self.p - 1, 1)
+        idle = [(s, s) for s in sorted(idle_slots)]
+        taken: set[int] = set()
+        assignments: list[tuple[int, int]] = []
+        last_best: Optional[int] = None
+        while idle:
+            heads = [(i, priority(r)) for i, r in enumerate(queue)
+                     if i not in taken]
+            best, pairs = pws.match_round(idle, heads)
+            if best is None:
+                break
+            # Obs. 4.3: at most p-1 tasks of the round's priority are stolen
+            pairs = pairs[:bound]
+            assert len(pairs) <= bound, \
+                "PWS bounded-steals-per-round invariant violated"
+            assert last_best is None or best <= last_best, \
+                "PWS round priorities must be non-increasing"
+            last_best = best
+            self.counters["rounds"] += 1
+            self.counters["max_round_matches"] = max(
+                self.counters["max_round_matches"], len(pairs))
+            for pair, qidx in pairs:
+                idle.remove(pair)
+                taken.add(qidx)
+                assignments.append((pair[1], qidx))
+                self.counters["matches"] += 1
+        return assignments
+
+
+@dataclass
+class _Slot:
+    """One decode lane of the fixed-size batch."""
+    req: Optional[Request] = None
+    state: str = "empty"      # empty | prefill | decode
+    filled: int = 0           # cache positions written (prefill progress)
+    pos: int = 0              # next decode position (== tokens in context)
+    last_token: int = 0
+    stats: dict = field(default_factory=dict)
+
+
+class Engine(Server):
+    """Continuous-batching engine over the lockstep :class:`Server`'s model
+    setup (same jitted prefill/decode; adds the per-row decode step and the
+    chunked-prefill step).  Dense-family models only (the engine drives
+    ``prefill_chunk``)."""
+
+    def __init__(self, cfg, mesh, *, max_batch: int = 4, max_len: int = 256,
+                 chunk: int = 16, eos_id: Optional[int] = None,
+                 opts: RunOptions = RunOptions()):
+        super().__init__(cfg, mesh, max_batch=max_batch, max_len=max_len,
+                         opts=opts)
+        if not hasattr(self.model, "prefill_chunk"):
+            raise ValueError(
+                f"Engine requires a model with prefill_chunk (family "
+                f"{cfg.family!r} doesn't expose one; use the lockstep Server)")
+        self.chunk = int(chunk)
+        self.eos_id = eos_id
+        self.scheduler = SlotScheduler(max_batch)
+
+        from repro.kernels import autotune as kernel_autotune
+        from repro.kernels import policy as kernel_policy
+        prov = kernel_autotune.provenance()
+        log.info("engine policy %s | autotune table %s (%d tuned plan(s), "
+                 "%s)", kernel_policy.current().describe(), prov["table"],
+                 prov["tuned_plans"],
+                 "present" if prov["table_exists"] else "absent")
+
+        def decode_rows(params, tokens, pos, cache):
+            logits, cache = self.model.decode_step(params, tokens, pos, cache)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        def chunk_step(params, tokens, offset, cache, last_row, *, first):
+            logits, cache = self.model.prefill_chunk(
+                params, tokens, offset, cache, first=first, last_row=last_row)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        import functools
+        self._decode_rows = jax.jit(decode_rows, donate_argnums=(3,))
+        self._chunk_first = jax.jit(
+            functools.partial(chunk_step, first=True), donate_argnums=(3,))
+        self._chunk_cont = jax.jit(
+            functools.partial(chunk_step, first=False), donate_argnums=(3,))
+
+    # -- slot-cache plumbing -------------------------------------------------
+    @staticmethod
+    def _slot_cache(cache, i):
+        """The b=1 cache slice for slot ``i`` (batch is axis 1 on every
+        leaf: k/v slabs (L,b,S,K,hd) and int8 scales (L,b,K))."""
+        return jax.tree.map(lambda a: a[:, i:i + 1], cache)
+
+    @staticmethod
+    def _set_slot(cache, i, sub):
+        return jax.tree.map(lambda big, small: big.at[:, i:i + 1].set(small),
+                            cache, sub)
+
+    # -- scheduling ----------------------------------------------------------
+    @staticmethod
+    def _work_remaining(req: Request, filled: int = 0) -> int:
+        """The PWS priority: prompt tokens still to prefill plus tokens
+        still to generate — larger tasks first, the size-based order."""
+        return (len(req.prompt) - filled) + (req.max_new - len(req.out))
+
+    def _evict(self, i: int):
+        self.slots[i] = _Slot()
+        self.scheduler.counters["evictions"] += 1
+
+    def _emit(self, i: int, tok: int) -> bool:
+        """Record one generated token for slot ``i``; returns True (and
+        evicts) when the request stops: max_new reached, EOS, or the cache
+        capacity exhausted."""
+        slot = self.slots[i]
+        r = slot.req
+        r.out.append(tok)
+        # slot.pos is the NEXT write position: at max_len the cache is full
+        stop = (len(r.out) >= r.max_new
+                or (self.eos_id is not None and tok == self.eos_id)
+                or slot.pos >= self.max_len)
+        if stop:
+            self._completed.append(r)
+            self._evict(i)
+        return stop
+
+    # -- engine loop ---------------------------------------------------------
+    def _admit(self, queue: list):
+        idle = [i for i, s in enumerate(self.slots) if s.state == "empty"]
+        if not idle or not queue:
+            return
+        matched = self.scheduler.assign(idle, queue, self._work_remaining)
+        # pop in descending queue order so earlier indices stay valid
+        for slot_id, qidx in sorted(matched, key=lambda m: -m[1]):
+            req = queue.pop(qidx)
+            self.slots[slot_id] = _Slot(req=req, state="prefill", filled=0)
+
+    def _advance_prefill(self, i: int):
+        """One fixed-size chunk for slot ``i``; on the final chunk the slot
+        flips to decode with the first generated token in hand."""
+        slot = self.slots[i]
+        r = slot.req
+        plen = len(r.prompt)
+        off = slot.filled
+        end = min(off + self.chunk, plen)
+        toks = np.zeros((1, self.chunk), np.int32)
+        toks[0, :end - off] = r.prompt[off:end]  # final chunk zero-padded
+        fn = self._chunk_first if off == 0 else self._chunk_cont
+        nxt, sub = fn(self.params, jnp.asarray(toks),
+                      jnp.asarray(off, jnp.int32),
+                      self._slot_cache(self.cache, i),
+                      jnp.asarray(end - off - 1, jnp.int32))
+        self.cache = self._set_slot(self.cache, i, sub)
+        slot.filled = end
+        self._n_chunks += 1
+        if end >= plen:
+            slot.state = "decode"
+            slot.pos = plen
+            tok = int(nxt[0])
+            slot.last_token = tok
+            self._emit(i, tok)
+
+    def _decode_step(self):
+        """One batched per-row decode step over every decoding slot.  Rows
+        not decoding still ride along (fixed shapes — no recompile): their
+        garbage k/v writes park at the next position their own prefill (or
+        admission) will overwrite before anything attends it — the
+        write-before-attend discipline that makes lane coexistence safe."""
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.state == "decode":
+                toks[i, 0] = s.last_token
+                pos[i] = s.pos
+            else:  # park: overwritten by the slot's next prefill chunk
+                pos[i] = s.filled
+        nxt, self.cache = self._decode_rows(
+            self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache)
+        nxt = np.asarray(nxt)
+        self._n_decode_steps += 1
+        for i, s in enumerate(self.slots):
+            if s.state != "decode":
+                continue
+            s.pos += 1
+            tok = int(nxt[i])
+            s.last_token = tok
+            self._emit(i, tok)
+
+    def run(self, requests: list[Request]) -> dict:
+        """Serve ``requests`` to completion with continuous batching; greedy
+        decode.  Returns wall/tokens/telemetry; per-request tokens land in
+        ``request.out`` (identical to running each request alone through the
+        lockstep path)."""
+        queue = list(requests)
+        self.scheduler = SlotScheduler(self.max_batch)  # per-run telemetry
+        self.slots = [_Slot() for _ in range(self.max_batch)]
+        self.cache = self.model.init_cache(self.max_batch, self.max_len)
+        self._completed: list[Request] = []
+        self._n_chunks = self._n_decode_steps = 0
+
+        t0 = time.time()
+        with self.mesh, axis_rules(self.rules, self.mesh):
+            while queue or any(s.state != "empty" for s in self.slots):
+                self._admit(queue)
+                prefilling = [i for i, s in enumerate(self.slots)
+                              if s.state == "prefill"]
+                if prefilling:
+                    # the chunk goes to the highest-priority prefilling slot
+                    # (work remaining; ties to the lowest slot index)
+                    target = max(
+                        prefilling,
+                        key=lambda i: (self._work_remaining(
+                            self.slots[i].req, self.slots[i].filled), -i))
+                    self._advance_prefill(target)
+                if any(s.state == "decode" for s in self.slots):
+                    self._decode_step()
+        dt = time.time() - t0
+        n_tokens = sum(len(r.out) for r in requests)
+        return {
+            "wall_s": dt,
+            "tokens": n_tokens,
+            "tok_per_s": n_tokens / max(dt, 1e-9),
+            "decode_steps": self._n_decode_steps,
+            "prefill_chunks": self._n_chunks,
+            "completed": {r.uid: len(r.out) for r in self._completed},
+            "telemetry": dict(self.scheduler.counters),
+        }
+
+
+def check_lockstep_parity(engine: Engine, requests: list[Request]) -> bool:
+    """Row-for-row acceptance check: each request run ALONE through the
+    lockstep jitted path must reproduce the engine's tokens exactly."""
+    ok = True
+    for r in requests:
+        alone = Request(r.uid, r.prompt, max_new=r.max_new)
+        with engine.mesh, axis_rules(engine.rules, engine.mesh):
+            logits, cache = engine._prefill(
+                engine.params, {"tokens": jnp.asarray(r.prompt)[None]})
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            for step in range(r.max_new):
+                tok = int(nxt[0])
+                alone.out.append(tok)
+                if engine.eos_id is not None and tok == engine.eos_id:
+                    break
+                if len(alone.out) >= r.max_new:
+                    break
+                pos = jnp.asarray(len(r.prompt) + step, jnp.int32)
+                nxt, cache = engine._decode(engine.params, nxt[:, None], pos,
+                                            cache)
+        if alone.out != r.out:
+            ok = False
+            log.error("parity FAIL uid=%d alone=%s engine=%s", r.uid,
+                      alone.out, r.out)
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--check-lockstep", action="store_true",
+                    help="re-run each request alone through the lockstep "
+                         "path and assert row-for-row token parity")
+    ap.add_argument("--impl", default="",
+                    help="execution-policy impl map (see serve.py docstring)")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    if args.impl:
+        from repro.kernels import policy
+        impl, variants = policy.parse_impl_spec(args.impl)
+        policy.install(policy.ambient().with_(impl=impl, variants=variants))
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.launch.mesh import make_debug_mesh
+    cfg = get_smoke_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_debug_mesh(tp=min(2, len(jax.devices())))
+    engine = Engine(cfg, mesh, max_batch=args.slots, max_len=128,
+                    chunk=args.chunk, opts=RunOptions())
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(3, cfg.vocab_size,
+                                    rng.integers(4, 24)).astype(np.int32),
+                    max_new=int(rng.integers(2, args.max_new + 1)))
+            for i in range(args.requests)]
+    out = engine.run(reqs)
+    print(f"served {out['tokens']} tokens in {out['wall_s']:.2f}s "
+          f"({out['tok_per_s']:.1f} tok/s; {out['decode_steps']} decode "
+          f"steps, {out['prefill_chunks']} prefill chunks)")
+    print(f"telemetry: {out['telemetry']}")
+    if args.check_lockstep:
+        assert check_lockstep_parity(engine, reqs), \
+            "engine tokens diverge from the lockstep baseline"
+        print("lockstep parity: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,14 @@
-"""Batched serving driver: continuous-batch prefill + decode loop.
+"""Batched serving driver: the LOCKSTEP baseline (wave-at-a-time).
 
 Serving model: requests arrive with prompts; the server packs up to
 ``max_batch`` requests, prefills them (left-padded to a shared window), and
-decodes in lockstep with per-row stopping.  The KV cache is planned by the
-PWS planner (kv-heads over tp when divisible, else sequence-sharded).
+decodes in lockstep — one shared position per step — with per-row stopping:
+a row that hits EOS / ``max_new`` stops appending (its lane still rides the
+batch until the wave's slowest request ends — that burned work is exactly
+what ``repro.launch.engine`` removes with per-row KV lengths, chunked
+prefill, and PWS slot scheduling; this module stays as the simple baseline
+and the parity oracle).  The KV cache is planned by the PWS planner
+(kv-heads over tp when divisible, else sequence-sharded).
 
 Backend selection is the ambient ``repro.kernels.policy`` execution
 policy's call.  The ``--impl`` flag installs a process policy with the
@@ -31,6 +36,7 @@ either jit.  ``REPRO_IMPL`` (same grammar) sets the policy without a flag.
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 from dataclasses import dataclass, field
 
@@ -43,6 +49,8 @@ from repro.core import planner
 from repro.core.sharding_hints import axis_rules, default_rules
 from repro.models import build_model
 from repro.models.base import RunOptions
+
+log = logging.getLogger("repro.serve")
 
 
 @dataclass
@@ -72,6 +80,12 @@ class Server:
         # dispatches — under jax.jit (all serving steps) it degrades to
         # replay; populate tables with benchmarks/autotune.py instead
         kernel_autotune.startup(self.opts.autotune)
+        from repro.kernels import policy as kernel_policy
+        prov = kernel_autotune.provenance()
+        log.info("policy %s | autotune table %s (%d tuned plan(s), %s)",
+                 kernel_policy.current().describe(), prov["table"],
+                 prov["tuned_plans"],
+                 "present" if prov["table_exists"] else "absent")
         self.model = build_model(cfg, self.opts)
         self.rules = default_rules(mesh)
 
@@ -89,8 +103,12 @@ class Server:
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode, donate_argnums=(3,))
 
-    def run_batch(self, requests: list[Request]) -> dict:
-        """Prefill + greedy decode a batch of requests in lockstep."""
+    def run_batch(self, requests: list[Request],
+                  eos_id: int | None = None) -> dict:
+        """Prefill + greedy decode a batch of requests in lockstep, with
+        per-row stop: a row stops appending once it hits ``max_new`` or
+        ``eos_id``, and the wave ends early when every row is done.  Returns
+        per-request completion counts alongside the wave totals."""
         b = len(requests)
         plen = max(len(r.prompt) for r in requests)
         toks = np.zeros((b, plen), np.int32)
@@ -108,20 +126,29 @@ class Server:
                 (b, enc_len, mc.d_model), dtype=np.float32))
 
         t0 = time.time()
+        done = [False] * b
         with self.mesh, axis_rules(self.rules, self.mesh):
             logits, cache = self._prefill(self.params, batch)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             max_new = max(r.max_new for r in requests)
             for step in range(max_new):
                 for i, r in enumerate(requests):
-                    if len(r.out) < r.max_new:
-                        r.out.append(int(nxt[i]))
+                    if done[i]:
+                        continue  # per-row stop: finished rows stop appending
+                    tok = int(nxt[i])
+                    r.out.append(tok)
+                    if (len(r.out) >= r.max_new
+                            or (eos_id is not None and tok == eos_id)):
+                        done[i] = True
+                if all(done):
+                    break  # the wave drained early — skip the dead steps
                 pos = jnp.asarray(plen + step, jnp.int32)
                 nxt, cache = self._decode(self.params, nxt[:, None], pos, cache)
         dt = time.time() - t0
         n_tokens = sum(len(r.out) for r in requests)
         return {"wall_s": dt, "tokens": n_tokens,
-                "tok_per_s": n_tokens / max(dt, 1e-9)}
+                "tok_per_s": n_tokens / max(dt, 1e-9),
+                "completed": {r.uid: len(r.out) for r in requests}}
 
 
 def main():

@@ -78,6 +78,12 @@ def train(cfg, *, mesh, steps: int, data_cfg: DataConfig,
     # trace (no-op on a cold cache); RunOptions.autotune / REPRO_AUTOTUNE
     # select off/replay/search
     kernel_autotune.startup(opts.autotune)
+    from repro.kernels import policy as kernel_policy
+    prov = kernel_autotune.provenance()
+    log.info("policy %s | autotune table %s (%d tuned plan(s), %s)",
+             kernel_policy.current().describe(), prov["table"],
+             prov["tuned_plans"],
+             "present" if prov["table_exists"] else "absent")
 
     ds = SyntheticLMDataset(data_cfg, cfg)
     example = ds.batch_at(0)

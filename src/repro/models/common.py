@@ -83,12 +83,17 @@ NEG_INF = -1e30
 
 
 def _mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int]):
-    """(q, k) additive bias from positions; built from iota (no big constants)."""
-    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), dtype=bool)
+    """(q, k) additive bias from positions; built from iota (no big
+    constants).  ``q_pos`` may be batched (b, sq) — the continuous-batching
+    decode where each row sits at its own position — giving a (b, q, k)
+    bias."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
     if causal:
-        ok &= k_pos[None, :] <= q_pos[:, None]
+        ok &= kp <= qp
     if window is not None:
-        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+        ok &= kp > (qp - window)
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
@@ -117,8 +122,10 @@ def attention_dense(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_
     scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
                         preferred_element_type=jnp.float32) * scale
     scores = constrain(scores, "batch", "kv_heads", "*", "*", "*")
-    scores = scores + _mask_bias(q_pos, k_pos, causal=causal,
-                                 window=window)[None, None, None]
+    bias = _mask_bias(q_pos, k_pos, causal=causal, window=window)
+    # batched (b, q, k) bias (per-row decode positions) aligns on batch
+    bias = bias[:, None, None] if bias.ndim == 3 else bias[None, None, None]
+    scores = scores + bias
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -440,6 +447,13 @@ def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
 
     if sq == sk:
         q_offset = kv_len = None  # zero-offset self-attention: static path
+    elif q_pos.ndim == 2:
+        # per-row decode: each batch lane carries its own position, so the
+        # kernel gets (b,) offset/length vectors (SMEM; batch-major fold
+        # means lane = bh // h, matching the kernel's rows contract)
+        q_offset = (q_pos[:, 0] - k_pos[0]).astype(jnp.int32)
+        kv_len = (jnp.minimum(q_offset + sq, sk).astype(jnp.int32)
+                  if causal else None)
     else:
         q_offset = (q_pos[0] - k_pos[0]).astype(jnp.int32)
         kv_len = jnp.minimum(q_offset + sq, sk) if causal else None
@@ -533,10 +547,31 @@ def kv_cache_dtype(default):
     return default, False
 
 
-def kv_scale(x):
+def cache_write(cache, new, write_at):
+    """Write ``new`` (b, s, kvh, hd) into the linear cache at sequence
+    offset ``write_at`` — a scalar (lockstep decode: every row at the same
+    depth) or a (b,) vector (continuous batching: each slot at its own
+    depth, one vmapped per-row dynamic slice)."""
+    if jnp.ndim(write_at) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, write_at,
+                                                   axis=1)
+    return jax.vmap(
+        lambda c, n, w: jax.lax.dynamic_update_slice_in_dim(c, n, w, axis=0)
+    )(cache, new, write_at)
+
+
+def kv_scale(x, valid=None):
     """Per-(batch, kv_head) symmetric int8 scale for a (b, s, kvh, hd) k or v
-    slab: absmax / 127, floored so an all-zero head still divides cleanly."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 3))  # (b, kvh)
+    slab: absmax / 127, floored so an all-zero head still divides cleanly.
+    ``valid`` (optional, traced ok) restricts the absmax to the first
+    ``valid`` sequence positions — a zero-padded prefill chunk must not let
+    pad-token k/v widen the scales that the rest of the request will
+    quantize with."""
+    ax = jnp.abs(x.astype(jnp.float32))
+    if valid is not None:
+        ok = jnp.arange(x.shape[1])[None, :, None, None] < valid
+        ax = jnp.where(ok, ax, 0.0)
+    amax = jnp.max(ax, axis=(1, 3))  # (b, kvh)
     return jnp.maximum(amax / 127.0, 1e-8)
 
 

@@ -98,16 +98,25 @@ class DenseLM(Model):
 
     # -- shared layer body ---------------------------------------------------
     def _attn(self, pl, x, q_pos, k_pos, window, theta, k_cache=None, v_cache=None,
-              write_at=None, k_scale=None, v_scale=None):
+              write_at=None, k_scale=None, v_scale=None, chunked=False,
+              calib_len=None):
         """Attention sub-block.  If caches given, write k/v at ``write_at`` and
         attend over the cache; else self-attention over x.
+
+        ``q_pos`` may be per-row (b, s) — continuous-batching decode, every
+        slot at its own depth — in which case ``write_at`` is a (b,) vector
+        too (see ``common.cache_write``).  ``chunked`` marks a continuation
+        prefill chunk: the fresh k/v is written into the cache and attention
+        runs over the cache prefix (causally masked to ``q_pos``) instead of
+        the fresh slab, so a long prompt streams in fixed-size chunks.
 
         An int8 cache (the policy's attention ``kv_dtype`` variant, see
         ``init_cache``) carries per-(batch, kv_head) scales: prefill
         calibrates them from the fresh k/v (and attends the exact fp values,
-        so prefill logits match the fp cache bit-for-bit); decode quantizes
-        the step's k/v with the stored scales and attends the int8 cache —
-        the kernel dequantizes inside the block load."""
+        so prefill logits match the fp cache bit-for-bit); decode and
+        continuation chunks quantize the step's k/v with the stored scales
+        (calibrated on the first chunk) and attend the int8 cache — the
+        kernel dequantizes inside the block load."""
         cfg = self.cfg
         b, s, d = x.shape
         hd = cfg.head_dim_
@@ -127,17 +136,22 @@ class DenseLM(Model):
         k = common.apply_rope(k, q_pos, theta)
 
         quantized = k_cache is not None and k_cache.dtype == jnp.int8
-        if quantized and s > 1:
-            # prefill: calibrate the per-(b, kvh) scales on the real k/v
-            k_scale, v_scale = common.kv_scale(k), common.kv_scale(v)
+        if quantized and s > 1 and not chunked:
+            # prefill: calibrate the per-(b, kvh) scales on the real k/v —
+            # restricted to calib_len positions when the chunk is zero-padded
+            k_scale = common.kv_scale(k, calib_len)
+            v_scale = common.kv_scale(v, calib_len)
         if k_cache is not None:
             kw = common.quantize_kv(k, k_scale) if quantized else k
             vw = common.quantize_kv(v, v_scale) if quantized else v
-            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kw, write_at, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vw, write_at, axis=1)
+            k_cache = common.cache_write(k_cache, kw, write_at)
+            v_cache = common.cache_write(v_cache, vw, write_at)
         att_scales = {}
-        if k_cache is not None and s == 1:
-            k_att, v_att = k_cache, v_cache  # decode: attend over the cache
+        if k_cache is not None and (s == 1 or chunked):
+            # decode / continuation chunk: attend over the cache (the fresh
+            # rows were just written — write-before-attend keeps every
+            # attended slot valid)
+            k_att, v_att = k_cache, v_cache
             if quantized:
                 att_scales = {"k_scale": k_scale, "v_scale": v_scale}
         else:
@@ -172,7 +186,8 @@ class DenseLM(Model):
                                     pl["w_down"]), jnp.zeros((), jnp.float32)
 
     # -- forward (training) --------------------------------------------------
-    def _backbone(self, params, tokens, q_pos, k_pos, *, caches=None, write_at=None):
+    def _backbone(self, params, tokens, q_pos, k_pos, *, caches=None,
+                  write_at=None, chunked=False, calib_len=None):
         """Runs the layer stack.  caches: optional stacked (k, v) — each
         (L,b,S,K,hd) — optionally followed by (k_scale, v_scale) stacked
         (L,b,K) when the cache is quantized.  Returns (hidden, new_caches,
@@ -202,7 +217,8 @@ class DenseLM(Model):
                 window = None
             x, (kc2, vc2, ks2, vs2) = self._attn(
                 pl, x, q_pos, k_pos, window, theta, k_cache=kc, v_cache=vc,
-                write_at=write_at, k_scale=ks, v_scale=vs)
+                write_at=write_at, k_scale=ks, v_scale=vs, chunked=chunked,
+                calib_len=calib_len)
             x, a = self._ffn(pl, x)
             if caches is None:
                 ys = None
@@ -281,11 +297,36 @@ class DenseLM(Model):
         logits = common.logits_matmul(x[:, -1], self._out_embed(params))
         return logits, self._cache_dict(ys)
 
+    def prefill_chunk(self, params, tokens, offset, cache, *, first=False,
+                      last_row=None):
+        """One fixed-size chunk of a chunked prefill: write this chunk's k/v
+        at ``offset`` (traced — chunks never recompile) and attend causally.
+        The first chunk attends its fresh k/v (identical numerics to the
+        one-shot ``prefill``; an int8 cache calibrates its scales here, over
+        only the valid rows — pad tokens must not widen them);
+        continuation chunks attend the cache prefix.  ``last_row`` picks the
+        logits row (the prompt's true last token when the final chunk is
+        zero-padded up to the chunk size).  Returns (logits, new_cache)."""
+        b, s = tokens.shape
+        max_len = cache["k"].shape[2]
+        q_pos = offset + jnp.arange(s, dtype=jnp.int32)
+        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        row = s - 1 if last_row is None else last_row
+        x, ys, _ = self._backbone(
+            params, tokens, q_pos, k_pos, caches=self._cache_tuple(cache),
+            write_at=offset, chunked=not first, calib_len=row + 1
+        )
+        logits = common.logits_matmul(x[:, row], self._out_embed(params))
+        return logits, self._cache_dict(ys)
+
     def decode_step(self, params, tokens, pos, cache, extras=None):
         cfg = self.cfg
         b = tokens.shape[0]
         max_len = cache["k"].shape[2]
-        q_pos = jnp.full((1,), pos, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        # scalar pos: lockstep decode; (b,) pos: continuous batching — each
+        # row queries and writes at its own depth (per-row kernel lanes)
+        q_pos = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
         k_pos = jnp.arange(max_len, dtype=jnp.int32)
         x, ys, _ = self._backbone(
             params, tokens, q_pos, k_pos, caches=self._cache_tuple(cache),

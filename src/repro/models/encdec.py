@@ -124,8 +124,8 @@ class EncDecLM(Model):
             h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
             q, k, v = self._proj_qkv(pl["self_attn"], h, h, q_pos, q_pos)
             if kc is not None:
-                kc = jax.lax.dynamic_update_slice_in_dim(kc, k, write_at, axis=1)
-                vc = jax.lax.dynamic_update_slice_in_dim(vc, v, write_at, axis=1)
+                kc = common.cache_write(kc, k, write_at)
+                vc = common.cache_write(vc, v, write_at)
                 k, v = kc, vc
             o = common.attention(q, k, v, q_pos, k_pos, causal=True,
                                  block_threshold=max(self.opts.q_block, self.opts.kv_block))
@@ -219,7 +219,9 @@ class EncDecLM(Model):
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
         max_len = cache["k"].shape[2]
-        q_pos = jnp.full((1,), pos, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        # scalar: lockstep; (b,) vector: per-row continuous-batching decode
+        q_pos = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
         k_pos = jnp.arange(max_len, dtype=jnp.int32)
         x, (kc, vc) = self._decoder(params, tokens, None, q_pos, k_pos,
                                     caches=(cache["k"], cache["v"]), write_at=pos,

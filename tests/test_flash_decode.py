@@ -103,6 +103,132 @@ def test_fully_masked_rows_are_zero_and_match_ref():
     np.testing.assert_array_equal(np.asarray(want), np.zeros_like(want))
 
 
+# -- per-row KV lengths (continuous batching) ---------------------------------
+
+def test_per_row_kv_len_matches_scalar_loop():
+    """A (rows,) kv_len/q_offset vector produces exactly what running each
+    row alone with scalar arguments produces — the per-lane SMEM reads don't
+    leak one row's length into another's."""
+    lens = np.array([5, 17, 64, 33], np.int32)
+    offs = lens - 1  # each row decoding its next token
+    q, k, v = _qkv(4, 1, 64, 32)
+    out = flash_attention(q, k, v, causal=True, q_offset=offs, kv_len=lens,
+                          q_block=1, kv_block=32)
+    for i in range(4):
+        alone = flash_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                causal=True, q_offset=int(offs[i]),
+                                kv_len=int(lens[i]), q_block=1, kv_block=32)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(alone[0]),
+                                   atol=ATOL, err_msg=f"row {i}")
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=offs,
+                                   kv_len=lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=ATOL)
+
+
+def test_per_row_kv_len_gqa_head_fold():
+    """rows < bh: each row's scalar fans out over its bh // rows folded
+    heads (the batch-major head fold of the model layer)."""
+    lens = np.array([9, 40], np.int32)
+    q, k, v = _qkv(8, 1, 64, 32, seed=2)  # 2 rows x 4 heads
+    out = flash_attention(q, k, v, causal=True, q_offset=lens - 1,
+                          kv_len=lens, q_block=1, kv_block=32)
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=lens - 1,
+                                   kv_len=lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=ATOL)
+
+
+def test_per_row_traced_vector_no_recompile():
+    """The engine's decode shape: one jitted step, per-row positions and
+    lengths traced (rows,) vectors — every ragged batch composition replays
+    the same compilation."""
+    q, k, v = _qkv(4, 1, 256, 64)
+
+    calls = []
+
+    @jax.jit
+    def step(offs, lens):
+        calls.append(1)
+        return flash_attention(q, k, v, causal=True, q_offset=offs,
+                               kv_len=lens, q_block=1, kv_block=64)
+
+    for lens in ([1, 64, 200, 256], [17, 17, 17, 17], [3, 255, 9, 128]):
+        lens = np.asarray(lens, np.int32)
+        out = step(jnp.asarray(lens - 1), jnp.asarray(lens))
+        want = ref.flash_attention_ref(q, k, v, causal=True,
+                                       q_offset=lens - 1, kv_len=lens)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=ATOL)
+    assert len(calls) == 1
+
+
+def test_per_row_zero_length_rows_are_zero():
+    """kv_len == 0 on some rows (empty slots parked in the batch): those
+    lanes emit exact zeros via the l_safe guard; live rows are untouched."""
+    lens = np.array([0, 32, 0, 7], np.int32)
+    q, k, v = _qkv(4, 1, 64, 32, seed=5)
+    out = flash_attention(q, k, v, causal=True,
+                          q_offset=np.maximum(lens - 1, 0), kv_len=lens,
+                          q_block=1, kv_block=32)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.zeros_like(out[0]))
+    np.testing.assert_array_equal(np.asarray(out[2]), np.zeros_like(out[2]))
+    want = ref.flash_attention_ref(q, k, v, causal=True,
+                                   q_offset=np.maximum(lens - 1, 0),
+                                   kv_len=lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=ATOL)
+
+
+def test_per_row_kv_len_int8_kv():
+    """Per-row lengths compose with the int8 KV cache: per-head scales
+    apply under ragged masking with parity against the dequantized oracle."""
+    lens = np.array([11, 64, 29, 48], np.int32)
+    q, k, v = _qkv(4, 1, 64, 32, seed=7)
+    k_scale = jnp.abs(k).max(axis=(1, 2), keepdims=True) / 127.0
+    v_scale = jnp.abs(v).max(axis=(1, 2), keepdims=True) / 127.0
+    k8 = jnp.clip(jnp.round(k / k_scale), -127, 127).astype(jnp.int8)
+    v8 = jnp.clip(jnp.round(v / v_scale), -127, 127).astype(jnp.int8)
+    out = flash_attention(q, k8, v8, causal=True, q_offset=lens - 1,
+                          kv_len=lens, k_scale=k_scale, v_scale=v_scale,
+                          q_block=1, kv_block=32)
+    want = ref.flash_attention_ref(q, k8 * k_scale, v8 * v_scale,
+                                   causal=True, q_offset=lens - 1,
+                                   kv_len=lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+
+def test_per_row_vjp_grads_match_ref():
+    """The backward kernels honor per-row vectors: chunked-prefill grads at
+    ragged offsets match the oracle, and each row's dead cache slots get
+    exactly zero dk/dv."""
+    lens = np.array([48, 96], np.int32)
+    offs = lens - 32
+    q, k, v = _qkv(2, 32, 128, 32, seed=9)
+
+    def loss_kernel(q, k, v):
+        o = flash_attention(q, k, v, causal=True, q_offset=offs, kv_len=lens,
+                            q_block=32, kv_block=32)
+        return jnp.sum(o * o)
+
+    def loss_ref(q, k, v):
+        o = ref.flash_attention_ref(q, k, v, causal=True, q_offset=offs,
+                                    kv_len=lens)
+        return jnp.sum(o * o)
+
+    got = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for g, w, name in zip(got, want, "qkv"):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-4,
+                                   err_msg=f"d{name}")
+    for i, n in enumerate(lens):
+        assert float(jnp.abs(got[1][i, n:]).max()) == 0.0
+        assert float(jnp.abs(got[2][i, n:]).max()) == 0.0
+
+
+def test_per_row_vector_length_must_divide_batch():
+    q, k, v = _qkv(4, 1, 64, 32)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, causal=True, kv_len=np.array([3, 5, 7]))
+
+
 # -- the custom VJP -----------------------------------------------------------
 
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 40), (False, 0)])

@@ -262,6 +262,70 @@ def _bench_serve_continuous() -> dict:
     return entry
 
 
+def _bench_serve_continuous_hybrid() -> dict:
+    """The non-dense serving claim: the same continuous-batching engine
+    loop serves the HYBRID family (LRU/conv recurrent state in a
+    ``StateCarry`` layout, parked rows riding identity updates) on the same
+    skewed straggler workload as the dense arm.  ``chunk`` covers the
+    prompts so prefill is single-chunk (the LRU h0-fold reassociates across
+    chunk boundaries); tokens are asserted identical to lockstep."""
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.launch.engine import Engine
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.serve import Request, Server
+    from repro.models.base import RunOptions
+
+    cfg = get_smoke_config("recurrentgemma-2b")
+    mesh = make_debug_mesh(tp=min(2, len(jax.devices())))
+    slots, waves = 4, 2
+    rng = np.random.default_rng(0)
+    spec = []
+    for _ in range(waves):
+        for mn in (24, 2, 2, 2):
+            spec.append((rng.integers(3, cfg.vocab_size, 12).astype(np.int32),
+                         mn))
+
+    def requests():
+        return [Request(i, p, max_new=mn) for i, (p, mn) in enumerate(spec)]
+
+    server = Server(cfg, mesh, max_batch=slots, max_len=64)
+    engine = Engine(cfg, mesh, max_batch=slots, max_len=64, chunk=16,
+                    opts=RunOptions())
+    server.run_batch([Request(0, spec[0][0], max_new=2)])
+    engine.run([Request(0, spec[0][0], max_new=2)])
+
+    reqs = requests()
+    lock_s = 0.0
+    for w in range(waves):
+        lock_s += server.run_batch(reqs[w * slots:(w + 1) * slots])["wall_s"]
+    lock_toks = sum(len(r.out) for r in reqs)
+
+    creqs = requests()
+    cont = engine.run(creqs)
+    assert [r.out for r in creqs] == [r.out for r in reqs], \
+        "hybrid continuous tokens diverge from lockstep tokens"
+
+    entry = {
+        "op": "serve", "shape": f"hybrid_{slots}slots_{len(spec)}reqs_skewed",
+        "lockstep_tok_per_s": round(lock_toks / max(lock_s, 1e-9), 1),
+        "continuous_tok_per_s": round(cont["tok_per_s"], 1),
+        "speedup": round((cont["tok_per_s"] * max(lock_s, 1e-9)) / lock_toks, 2),
+        "continuous_decode_steps": cont["decode_steps"],
+        "continuous_prefill_chunks": cont["prefill_chunks"],
+        "telemetry": cont["telemetry"],
+    }
+    print(f"kernel_serve_lockstep_{entry['shape']},"
+          f"{lock_s / max(lock_toks, 1) * 1e6:.0f},"
+          f"{entry['lockstep_tok_per_s']}tok/s")
+    print(f"kernel_serve_continuous_{entry['shape']},"
+          f"{cont['wall_s'] / max(cont['tokens'], 1) * 1e6:.0f},"
+          f"{entry['continuous_tok_per_s']}tok/s "
+          f"({entry['speedup']}x lockstep)")
+    return entry
+
+
 def main(json_path: str | None = None, ops: list[str] | None = None) -> dict:
     results: dict[str, dict] = {}
     cases = _cases()
@@ -313,6 +377,8 @@ def main(json_path: str | None = None, ops: list[str] | None = None) -> dict:
         results["serve_decode"] = _bench_serve_decode()
     if ops is None or "serve_continuous" in ops:
         results["serve_continuous"] = _bench_serve_continuous()
+    if ops is None or "serve_continuous_hybrid" in ops:
+        results["serve_continuous_hybrid"] = _bench_serve_continuous_hybrid()
 
     from repro.kernels import policy
     dp = planner.device_params()

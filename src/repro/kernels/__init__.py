@@ -18,12 +18,13 @@ points, each in exactly one module:
     ``matmul=pallas:qkv_fused=true`` for fused QKV projections —
     ``REPRO_STRICT_TILES``, ``REPRO_INTERPRET``), launchers
     ``install()`` the ``--impl`` flag as a process layer, and
-    ``apply()``/``pin()`` push scoped overrides (a pin records its reason —
-    e.g. hybrid's ring-buffer decode, whose rotated cache violates the
-    flash kernel's contiguous-positions contract).  Model code never names
-    a backend; the deprecated ``RunOptions.attention_impl``/``matmul_impl``
-    knobs survive only as a compat shim that constructs an equivalent
-    scope.
+    ``apply()``/``pin()`` push scoped overrides (a pin records its
+    reason).  An ``interpret`` variant knob
+    (``--impl 'op=pallas:interpret=true'``) forces interpret mode per op,
+    sitting between the explicit call arg and the policy-global flag.
+    Model code never names a backend; the deprecated
+    ``RunOptions.attention_impl``/``matmul_impl`` knobs survive only as a
+    compat shim that constructs an equivalent scope.
 
 ``registry``
     ``resolve(name, **context)`` is the single backend-resolution code path
@@ -49,7 +50,17 @@ points, each in exactly one module:
     slots sit at different cache depths: concrete vectors keep the
     static grid shrink (to the max length), traced vectors keep the
     no-recompile property across ragged batch compositions
-    (``launch.engine`` is the consumer).
+    (``launch.engine`` is the consumer).  A ``kv_len == 0`` lane attends
+    nothing and emits exact zeros (the parked-row contract).  The caller
+    side of that contract lives in ``repro.models.cache``: the
+    ``DecodeCache`` layouts — ``LinearKV`` (dense slabs + int8 scales,
+    per-row ``pos``), ``RingKV`` (a wrapped window buffer whose
+    ``attend_lens``/``slot_positions`` map raw slots onto the kernel's
+    per-row ``q_offset``/``kv_len`` vectors, sound because causal softmax
+    is permutation-invariant over the live window), ``CrossKV`` (frozen
+    after the first chunk) and ``StateCarry`` (recurrent conv/LRU/SSD
+    state with a per-row validity mask) — are the single source of truth
+    for per-row cache state across every model family.
     GQA is kernel-native: callers hand K/V over at their *native* head
     count with ``n_heads`` declaring the query head count, and the kv
     ``index_map`` routes every query head's grid steps into its group's KV

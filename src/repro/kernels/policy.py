@@ -311,10 +311,12 @@ def apply(pol: Optional[ExecutionPolicy] = None, **updates):
 
 def pin(op: str, backend: str, *, reason: str):
     """Scoped single-op override with recorded provenance — the shape a
-    per-layer exception takes (e.g. hybrid's ring-buffer decode routes
-    attention to the jnp path because its cache slot order is a rotation).
-    ``reason`` is mandatory: a pin without a why is a hardcoded string with
-    extra steps."""
+    per-layer exception takes.  (The historical example, hybrid's
+    ring-buffer decode pinning attention to jnp, is gone: the ``RingKV``
+    layout maps wrapped slots onto the flash kernel's per-row
+    ``q_offset``/``kv_len`` vectors, so no family pins today.)  ``reason``
+    is mandatory: a pin without a why is a hardcoded string with extra
+    steps."""
     return apply(impl={op: backend}, reason=reason)
 
 

@@ -212,6 +212,10 @@ def dispatch(name: str, *args, impl: Optional[str] = None,
                                   search_kwargs={**kwargs, **variant}))
     tiles.update(overrides)
     if interpret is None:
+        # per-op variant knob (--impl 'op=pallas:interpret=true') sits
+        # between the explicit call arg and the policy-global flag
+        interpret = pol.variant_for(name).get("interpret")
+    if interpret is None:
         interpret = pol.interpret if pol.interpret is not None else not native
     return spec.pallas(*args, interpret=interpret, **kwargs, **tiles)
 

@@ -18,11 +18,13 @@ until the old one drains.  This engine removes both stalls:
   capacity releases its slot immediately (an *eviction*); the next queued
   request is admitted into it without waiting for the rest of the batch.
 
-* **Chunked prefill.**  Prompts stream into the cache in fixed-size chunks
-  (``prefill_chunk`` on the model — first chunk attends its fresh k/v,
-  continuations attend the cache prefix), one chunk per engine iteration,
-  interleaved with decode steps so a long prompt never stalls in-flight
-  rows.  An int8 KV cache calibrates its scales on the first chunk.
+* **Batched chunked prefill.**  Prompts stream into the cache in
+  fixed-size chunks (``prefill_chunk`` on the model), and every prefilling
+  slot advances each iteration through at most TWO padded full-batch
+  launches — one for first chunks (modality frontends / int8 scale
+  calibration run there), one for continuations — with per-row ``(b,)``
+  offsets and valid-token ``lens`` (0 parks a row).  Chunks interleave
+  with decode steps so a long prompt never stalls in-flight rows.
 
 * **PWS slot scheduling.**  Admission is the paper's §4.7 priority-matching
   discipline, run through the same ``core.pws.match_round`` the simulated
@@ -34,10 +36,28 @@ until the old one drains.  This engine removes both stalls:
   drain (asserted).  The scheduler's match/steal/eviction counters are the
   engine's telemetry.
 
+* **Eviction under memory pressure.**  An optional ``cache_budget`` (total
+  live context tokens across slots, a host-mirrored high-water mark)
+  bounds cache occupancy: while over budget with more than one active
+  slot, the largest-context slot is evicted and its request re-queued with
+  its generated tokens folded into the prompt (greedy decode makes the
+  replay token-identical), re-entering through the same ``match_round``
+  admission at work-remaining priority.
+
+The engine serves EVERY model family that implements the DecodeCache
+serving contract (``init_cache`` -> ``repro.models.cache`` layouts,
+``prefill_chunk``, per-row ``decode_step``) — dense, hybrid, ssm, vlm,
+audio; a family missing a method fails construction with a structured
+``UnsupportedFamilyError``.
+
 Numerics contract: with greedy decoding the engine's per-request tokens are
 IDENTICAL to running each request alone through the lockstep path (same
 jitted model functions, write-before-attend keeps parked rows harmless) —
-``tests/test_engine.py`` asserts this request-for-request, fp32 and int8.
+``tests/test_engine.py`` asserts this request-for-request: dense fp32 and
+int8, hybrid, and ssm.  (Recurrent-state families are exact because parked
+rows carry identity state updates; hybrid needs ``chunk`` >= the longest
+prompt — the LRU h0-fold reassociates across chunk boundaries — and ssm
+needs prompt/chunk lengths aligned to ``cfg.ssm_chunk``.)
 """
 from __future__ import annotations
 
@@ -54,7 +74,8 @@ import numpy as np
 from repro.core import pws
 from repro.core.sharding_hints import axis_rules
 from repro.launch.serve import Request, Server
-from repro.models.base import RunOptions
+from repro.models import cache as dcache
+from repro.models.base import Model, RunOptions, UnsupportedFamilyError
 
 log = logging.getLogger("repro.engine")
 
@@ -78,6 +99,7 @@ class SlotScheduler:
             "matches": 0,        # requests admitted into slots (steals)
             "rounds": 0,         # matching rounds run
             "evictions": 0,      # slot releases (stop / capacity)
+            "pressure_evictions": 0,  # budget evictions (request re-queued)
             "max_round_matches": 0,
         }
 
@@ -123,27 +145,45 @@ class _Slot:
     filled: int = 0           # cache positions written (prefill progress)
     pos: int = 0              # next decode position (== tokens in context)
     last_token: int = 0
+    # the residency's effective prompt: the request's prompt plus any
+    # tokens generated before a pressure eviction (replayed on re-admit)
+    prompt: Optional[np.ndarray] = None
     stats: dict = field(default_factory=dict)
+
+    @property
+    def context(self) -> int:
+        """Live cache tokens this slot holds (budget accounting)."""
+        return self.pos if self.state == "decode" else self.filled
 
 
 class Engine(Server):
     """Continuous-batching engine over the lockstep :class:`Server`'s model
     setup (same jitted prefill/decode; adds the per-row decode step and the
-    chunked-prefill step).  Dense-family models only (the engine drives
-    ``prefill_chunk``)."""
+    batched chunked-prefill step).  Serves every family implementing the
+    DecodeCache contract; ``cache_budget`` (total live context tokens) turns
+    on eviction under memory pressure."""
 
     def __init__(self, cfg, mesh, *, max_batch: int = 4, max_len: int = 256,
                  chunk: int = 16, eos_id: Optional[int] = None,
+                 cache_budget: Optional[int] = None,
                  opts: RunOptions = RunOptions()):
         super().__init__(cfg, mesh, max_batch=max_batch, max_len=max_len,
                          opts=opts)
-        if not hasattr(self.model, "prefill_chunk"):
-            raise ValueError(
-                f"Engine requires a model with prefill_chunk (family "
-                f"{cfg.family!r} doesn't expose one; use the lockstep Server)")
+        for name in ("init_cache", "prefill_chunk", "decode_step"):
+            impl = getattr(type(self.model), name, None)
+            if impl is None or impl is getattr(Model, name, None):
+                raise UnsupportedFamilyError(cfg.family, name)
         self.chunk = int(chunk)
         self.eos_id = eos_id
+        self.cache_budget = cache_budget
         self.scheduler = SlotScheduler(max_batch)
+        # host-side staging for modality-frontend inputs (VLM/audio): one
+        # full-batch buffer per spec, rows written at admission and shipped
+        # with every first-chunk launch
+        specs = self.model.batch_extras_specs(max_batch, max_len)
+        self._extras_host = {
+            k: np.zeros(s.shape, s.dtype) for k, s in specs.items()
+        } or None
 
         from repro.kernels import autotune as kernel_autotune
         from repro.kernels import policy as kernel_policy
@@ -158,37 +198,38 @@ class Engine(Server):
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, cache
 
-        def chunk_step(params, tokens, offset, cache, last_row, *, first):
+        def chunk_step(params, tokens, offset, lens, cache, extras, *, first):
             logits, cache = self.model.prefill_chunk(
-                params, tokens, offset, cache, first=first, last_row=last_row)
+                params, tokens, offset, cache, first=first, lens=lens,
+                extras=extras)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, cache
 
         import functools
         self._decode_rows = jax.jit(decode_rows, donate_argnums=(3,))
         self._chunk_first = jax.jit(
-            functools.partial(chunk_step, first=True), donate_argnums=(3,))
+            functools.partial(chunk_step, first=True), donate_argnums=(4,))
         self._chunk_cont = jax.jit(
-            functools.partial(chunk_step, first=False), donate_argnums=(3,))
-
-    # -- slot-cache plumbing -------------------------------------------------
-    @staticmethod
-    def _slot_cache(cache, i):
-        """The b=1 cache slice for slot ``i`` (batch is axis 1 on every
-        leaf: k/v slabs (L,b,S,K,hd) and int8 scales (L,b,K))."""
-        return jax.tree.map(lambda a: a[:, i:i + 1], cache)
-
-    @staticmethod
-    def _set_slot(cache, i, sub):
-        return jax.tree.map(lambda big, small: big.at[:, i:i + 1].set(small),
-                            cache, sub)
+            functools.partial(chunk_step, first=False), donate_argnums=(4,))
 
     # -- scheduling ----------------------------------------------------------
     @staticmethod
+    def _effective_prompt(req: Request) -> np.ndarray:
+        """The token sequence a residency must prefill: the prompt, plus —
+        after a pressure eviction — every token already generated (greedy
+        decode replays them deterministically)."""
+        prompt = np.asarray(req.prompt, np.int32)
+        if req.out:
+            prompt = np.concatenate([prompt,
+                                     np.asarray(req.out, np.int32)])
+        return prompt
+
+    @staticmethod
     def _work_remaining(req: Request, filled: int = 0) -> int:
-        """The PWS priority: prompt tokens still to prefill plus tokens
+        """The PWS priority: context tokens still to prefill plus tokens
         still to generate — larger tasks first, the size-based order."""
-        return (len(req.prompt) - filled) + (req.max_new - len(req.out))
+        return ((len(req.prompt) + len(req.out) - filled)
+                + (req.max_new - len(req.out)))
 
     def _evict(self, i: int):
         self.slots[i] = _Slot()
@@ -219,32 +260,63 @@ class Engine(Server):
         # pop in descending queue order so earlier indices stay valid
         for slot_id, qidx in sorted(matched, key=lambda m: -m[1]):
             req = queue.pop(qidx)
-            self.slots[slot_id] = _Slot(req=req, state="prefill", filled=0)
+            self.slots[slot_id] = _Slot(req=req, state="prefill", filled=0,
+                                        prompt=self._effective_prompt(req))
+            # the row's per-row lengths/validity reset here; slabs are NOT
+            # zeroed — write-before-attend makes stale tokens unreachable
+            self.cache = dcache.reset_row(self.cache, slot_id)
+            if self._extras_host is not None and req.extras:
+                for key, val in req.extras.items():
+                    self._extras_host[key][slot_id] = val
 
-    def _advance_prefill(self, i: int):
-        """One fixed-size chunk for slot ``i``; on the final chunk the slot
-        flips to decode with the first generated token in hand."""
-        slot = self.slots[i]
-        r = slot.req
-        plen = len(r.prompt)
-        off = slot.filled
-        end = min(off + self.chunk, plen)
-        toks = np.zeros((1, self.chunk), np.int32)
-        toks[0, :end - off] = r.prompt[off:end]  # final chunk zero-padded
-        fn = self._chunk_first if off == 0 else self._chunk_cont
-        nxt, sub = fn(self.params, jnp.asarray(toks),
-                      jnp.asarray(off, jnp.int32),
-                      self._slot_cache(self.cache, i),
-                      jnp.asarray(end - off - 1, jnp.int32))
-        self.cache = self._set_slot(self.cache, i, sub)
-        slot.filled = end
-        self._n_chunks += 1
-        if end >= plen:
-            slot.state = "decode"
-            slot.pos = plen
-            tok = int(nxt[0])
-            slot.last_token = tok
-            self._emit(i, tok)
+    def _advance_prefill(self):
+        """Advance EVERY prefilling slot by one fixed-size chunk, batched:
+        one padded full-batch launch for first chunks (all at offset 0 —
+        modality frontends and int8 scale calibration run there, masked to
+        live rows) and one for continuations, each with per-row offsets and
+        valid-token ``lens`` (0 parks a row: decode lanes park at ``pos``,
+        so their garbage writes land where their own next token lands
+        first).  A slot whose chunk finishes its prompt flips to decode
+        with the first generated token in hand."""
+        first = [i for i, s in enumerate(self.slots)
+                 if s.state == "prefill" and s.filled == 0]
+        cont = [i for i, s in enumerate(self.slots)
+                if s.state == "prefill" and s.filled > 0]
+        for group, fn in ((first, self._chunk_first),
+                          (cont, self._chunk_cont)):
+            if not group:
+                continue
+            toks = np.zeros((self.max_batch, self.chunk), np.int32)
+            offset = np.zeros((self.max_batch,), np.int32)
+            lens = np.zeros((self.max_batch,), np.int32)
+            for i, s in enumerate(self.slots):
+                if i in group:
+                    end = min(s.filled + self.chunk, len(s.prompt))
+                    toks[i, :end - s.filled] = s.prompt[s.filled:end]
+                    offset[i] = s.filled
+                    lens[i] = end - s.filled
+                else:  # park: overwritten before anything attends it
+                    offset[i] = s.context
+            extras = None
+            if fn is self._chunk_first and self._extras_host is not None:
+                extras = {k: jnp.asarray(v)
+                          for k, v in self._extras_host.items()}
+            nxt, self.cache = fn(self.params, jnp.asarray(toks),
+                                 jnp.asarray(offset), jnp.asarray(lens),
+                                 self.cache, extras)
+            nxt = np.asarray(nxt)
+            self._n_chunks += 1
+            self._n_chunk_rows += len(group)
+            for i in group:
+                slot = self.slots[i]
+                slot.filled += int(lens[i])
+                if slot.filled >= len(slot.prompt):
+                    slot.state = "decode"
+                    slot.pos = len(slot.prompt)
+                    self.cache = dcache.set_row_valid(self.cache, i, True)
+                    tok = int(nxt[i])
+                    slot.last_token = tok
+                    self._emit(i, tok)
 
     def _decode_step(self):
         """One batched per-row decode step over every decoding slot.  Rows
@@ -259,7 +331,7 @@ class Engine(Server):
                 toks[i, 0] = s.last_token
                 pos[i] = s.pos
             else:  # park: overwritten by the slot's next prefill chunk
-                pos[i] = s.filled
+                pos[i] = s.context
         nxt, self.cache = self._decode_rows(
             self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache)
         nxt = np.asarray(nxt)
@@ -272,6 +344,27 @@ class Engine(Server):
             s.last_token = tok
             self._emit(i, tok)
 
+    def _apply_pressure(self, queue: list):
+        """Evict while the host-mirrored live-context total exceeds
+        ``cache_budget`` and more than one slot is active: the
+        largest-context slot releases, its request re-queued with generated
+        tokens folded into the prompt (replayed exactly under greedy
+        decode).  A lone active slot never evicts — progress is guaranteed
+        whatever the budget."""
+        if self.cache_budget is None:
+            return
+        while True:
+            active = [(s.context, i) for i, s in enumerate(self.slots)
+                      if s.state != "empty"]
+            if (len(active) <= 1
+                    or sum(c for c, _ in active) <= self.cache_budget):
+                return
+            _, victim = max(active)
+            req = self.slots[victim].req
+            self.slots[victim] = _Slot()
+            queue.append(req)
+            self.scheduler.counters["pressure_evictions"] += 1
+
     def run(self, requests: list[Request]) -> dict:
         """Serve ``requests`` to completion with continuous batching; greedy
         decode.  Returns wall/tokens/telemetry; per-request tokens land in
@@ -282,24 +375,16 @@ class Engine(Server):
         self.slots = [_Slot() for _ in range(self.max_batch)]
         self.cache = self.model.init_cache(self.max_batch, self.max_len)
         self._completed: list[Request] = []
-        self._n_chunks = self._n_decode_steps = 0
+        self._n_chunks = self._n_decode_steps = self._n_chunk_rows = 0
 
         t0 = time.time()
         with self.mesh, axis_rules(self.rules, self.mesh):
             while queue or any(s.state != "empty" for s in self.slots):
                 self._admit(queue)
-                prefilling = [i for i, s in enumerate(self.slots)
-                              if s.state == "prefill"]
-                if prefilling:
-                    # the chunk goes to the highest-priority prefilling slot
-                    # (work remaining; ties to the lowest slot index)
-                    target = max(
-                        prefilling,
-                        key=lambda i: (self._work_remaining(
-                            self.slots[i].req, self.slots[i].filled), -i))
-                    self._advance_prefill(target)
+                self._advance_prefill()
                 if any(s.state == "decode" for s in self.slots):
                     self._decode_step()
+                self._apply_pressure(queue)
         dt = time.time() - t0
         n_tokens = sum(len(r.out) for r in requests)
         return {
@@ -308,6 +393,7 @@ class Engine(Server):
             "tok_per_s": n_tokens / max(dt, 1e-9),
             "decode_steps": self._n_decode_steps,
             "prefill_chunks": self._n_chunks,
+            "prefill_chunk_rows": self._n_chunk_rows,
             "completed": {r.uid: len(r.out) for r in self._completed},
             "telemetry": dict(self.scheduler.counters),
         }
@@ -319,9 +405,12 @@ def check_lockstep_parity(engine: Engine, requests: list[Request]) -> bool:
     ok = True
     for r in requests:
         alone = Request(r.uid, r.prompt, max_new=r.max_new)
+        batch = {"tokens": jnp.asarray(r.prompt)[None]}
+        if r.extras:
+            for key, val in r.extras.items():
+                batch[key] = jnp.asarray(val)[None]
         with engine.mesh, axis_rules(engine.rules, engine.mesh):
-            logits, cache = engine._prefill(
-                engine.params, {"tokens": jnp.asarray(r.prompt)[None]})
+            logits, cache = engine._prefill(engine.params, batch)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             for step in range(r.max_new):
                 tok = int(nxt[0])
@@ -348,6 +437,13 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--prompt-align", type=int, default=1,
+                    help="round generated prompt lengths up to a multiple "
+                         "of N (ssm exactness needs chunk boundaries on "
+                         "cfg.ssm_chunk multiples)")
+    ap.add_argument("--cache-budget", type=int, default=0,
+                    help="total live context tokens across slots before "
+                         "pressure eviction kicks in (0 = unbounded)")
     ap.add_argument("--check-lockstep", action="store_true",
                     help="re-run each request alone through the lockstep "
                          "path and assert row-for-row token parity")
@@ -366,11 +462,25 @@ def main():
     cfg = get_smoke_config(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_debug_mesh(tp=min(2, len(jax.devices())))
     engine = Engine(cfg, mesh, max_batch=args.slots, max_len=128,
-                    chunk=args.chunk, opts=RunOptions())
+                    chunk=args.chunk, opts=RunOptions(),
+                    cache_budget=args.cache_budget or None)
     rng = np.random.default_rng(0)
+
+    def plen():
+        n = int(rng.integers(4, 24))
+        return -(-n // args.prompt_align) * args.prompt_align
+
+    specs = engine.model.batch_extras_specs(1, 128)
+
+    def mk_extras():
+        # one random modality-frontend row per request (VLM/audio stubs)
+        return {k: rng.standard_normal(s.shape[1:]).astype(s.dtype)
+                for k, s in specs.items()} or None
+
     reqs = [Request(i, rng.integers(3, cfg.vocab_size,
-                                    rng.integers(4, 24)).astype(np.int32),
-                    max_new=int(rng.integers(2, args.max_new + 1)))
+                                    plen()).astype(np.int32),
+                    max_new=int(rng.integers(2, args.max_new + 1)),
+                    extras=mk_extras())
             for i in range(args.requests)]
     out = engine.run(reqs)
     print(f"served {out['tokens']} tokens in {out['wall_s']:.2f}s "

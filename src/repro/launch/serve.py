@@ -59,6 +59,9 @@ class Request:
     prompt: np.ndarray  # (plen,) int32
     max_new: int = 16
     out: list = field(default_factory=list)
+    # modality-frontend inputs keyed by the model's batch_extras_specs()
+    # (e.g. "image_embeds" / "audio_frames"), one row each, no batch axis
+    extras: dict | None = None
 
 
 class Server:

@@ -18,6 +18,21 @@ Params = Any
 Cache = Any
 
 
+class UnsupportedFamilyError(TypeError):
+    """A model family does not satisfy the serving contract.  Raised by the
+    continuous-batching engine when construction finds a missing method;
+    carries the family and the first missing contract name so callers (and
+    tests) can assert on the structured fields instead of message text."""
+
+    def __init__(self, family: str, missing: str):
+        self.family = family
+        self.missing = missing
+        super().__init__(
+            f"model family {family!r} does not implement the serving "
+            f"contract: missing {missing!r} (required: init_cache -> "
+            f"DecodeCache, prefill_chunk, per-row decode_step)")
+
+
 @dataclass(frozen=True)
 class RunOptions:
     """Execution options — the knobs the perf hillclimb turns.  Defaults are
@@ -74,7 +89,7 @@ class Model:
         # masquerade as an explicit user choice
         self._policy_updates = policy.from_run_options(raw)
         if self._policy_updates is not None:
-            for name in ("loss", "prefill", "decode_step"):
+            for name in ("loss", "prefill", "prefill_chunk", "decode_step"):
                 setattr(self, name,
                         policy.bind(self._policy_updates, getattr(self, name)))
 
@@ -94,9 +109,24 @@ class Model:
         """Returns (last_token_logits, cache)."""
         raise NotImplementedError
 
+    def prefill_chunk(self, params: Params, tokens: jax.Array, offset,
+                      cache: Cache, *, first: bool = False, lens=None,
+                      extras: Optional[dict] = None):
+        """One padded prefill chunk over the full cache batch.
+
+        tokens: (b, s); offset: scalar or per-row (b,) context depths
+        already in the cache; lens: optional (b,) valid-token counts
+        (None = the whole chunk is valid on every row; 0 parks a row —
+        its cache state must come through unchanged).  ``first`` is a
+        static flag marking each request's first chunk (modality
+        frontends / scale calibration run there).  Returns
+        (per-row last-valid-token logits (b, V), cache)."""
+        raise NotImplementedError
+
     def decode_step(self, params: Params, tokens: jax.Array, pos: jax.Array, cache: Cache,
                     extras: Optional[dict] = None):
-        """tokens: (b, 1); pos: scalar current length.  Returns (logits, cache)."""
+        """tokens: (b, 1); pos: scalar current length or per-row (b,)
+        positions.  Returns (logits, cache)."""
         raise NotImplementedError
 
     # -- dry-run plumbing ----------------------------------------------------

@@ -414,7 +414,7 @@ def attention_blockwise_triangular(q, k, v, q_pos, k_pos, *, window=None,
 
 
 def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
-                          kv_block, k_scale=None, v_scale=None):
+                          kv_block, k_scale=None, v_scale=None, kv_len=None):
     """Adapter onto the registry's flash-attention Pallas kernel: fold heads
     into batch (batch-major, head = kv_head * n_rep + rep), dispatch, unfold.
     K/V stay at their NATIVE head count — the kernel's kv ``index_map``
@@ -422,17 +422,20 @@ def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
     cache-sized ``repeat_kv`` copy the old adapter paid per call never
     exists; the kernel's rep-aware transposed grid group-sums dk/dv.
 
-    CONTRACT: positions must be contiguous ranges (q row i at
-    ``q_pos[0] + i``, key j at ``k_pos[0] + j``) whenever they matter
-    (causal or windowed masking).  Linear caches and fresh self-attention
-    satisfy this; a *ring-buffer* cache (hybrid's windowed decode) does
-    not — its slot order is a rotation, so such callers scope a
-    ``policy.pin("attention", "jnp", reason=...)`` around the call.  For
-    decode (sq != sk) the kernel gets the query offset, and under causal
-    masking a ``kv_len`` so KV blocks past the attended prefix are skipped
-    instead of computed-then-masked.  ``k_scale``/``v_scale`` — per
-    (batch, kv_head) f32, paired with an int8 k/v — ride to the kernel's
-    in-block dequant."""
+    CONTRACT: with ``kv_len=None``, positions must be contiguous ranges
+    (q row i at ``q_pos[0] + i``, key j at ``k_pos[0] + j``) whenever they
+    matter (causal or windowed masking) — linear DecodeCache layouts and
+    fresh self-attention satisfy this, and the offset/length vectors are
+    derived from the positions.  An explicit ``kv_len`` (scalar or per-row
+    (b,)) overrides the derivation for layouts whose keys are raw cache
+    slots starting at 0 — ``RingKV``'s wrap-aware mapping passes
+    ``q_offset = pos`` and ``kv_len = min(pos + 1, C)`` so a wrapped row
+    attends its whole ring (slot order is a softmax permutation) and an
+    unwrapped row its contiguous prefix; ``kv_len == 0`` rows emit exact
+    zeros (the kernel's ``l_safe`` guard).  Under causal masking KV blocks
+    past ``kv_len`` are skipped instead of computed-then-masked.
+    ``k_scale``/``v_scale`` — per (batch, kv_head) f32, paired with an int8
+    k/v — ride to the kernel's in-block dequant."""
     from repro.kernels import registry
 
     b, sq, h, hd = q.shape
@@ -445,7 +448,14 @@ def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
     def fold_scale(s):
         return None if s is None else jnp.asarray(s, jnp.float32).reshape(b * kvh)
 
-    if sq == sk:
+    if kv_len is not None:
+        # explicit valid-key counts: keys are raw cache slots (base 0), so
+        # the query offset is the position itself (per-row or scalar)
+        q_offset = (q_pos[:, 0] if q_pos.ndim == 2 else q_pos[:1]).astype(jnp.int32)
+        kv_len = jnp.asarray(kv_len, jnp.int32)
+        if kv_len.ndim == 0:
+            kv_len = kv_len[None]
+    elif sq == sk:
         q_offset = kv_len = None  # zero-offset self-attention: static path
     elif q_pos.ndim == 2:
         # per-row decode: each batch lane carries its own position, so the
@@ -479,7 +489,8 @@ def _attention_via_kernel(q, k, v, q_pos, k_pos, *, causal, window, q_block,
 def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=None,
               use_banded_local: bool = False, block_threshold: int = 2048,
               q_block: int = 512, kv_block: int = 1024,
-              causal_block_skip: bool = False, k_scale=None, v_scale=None):
+              causal_block_skip: bool = False, k_scale=None, v_scale=None,
+              kv_len=None):
     """Dispatch: dense for small/decode, blockwise for long, banded for local,
     triangular for causal long self-attention when block-skip is enabled.
 
@@ -492,11 +503,16 @@ def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=
     ``resolve`` consults the kernel's capability metadata (``has_vjp``; the
     ``needs`` gate rejects custom softmax scales and traced scan-carried
     windows — the kernel's window/causal are static kwargs).  The kernel
-    route additionally assumes contiguous position ranges (every model path
-    satisfies this — the ring-buffer exception pins itself to jnp);
-    cross-attention with meaningless positions is fine too since it is
-    non-causal/unwindowed.  Banded-local is a model-level algorithm choice,
-    so it stays on its jnp path regardless of the resolved backend.
+    route assumes contiguous position ranges UNLESS the caller passes an
+    explicit ``kv_len`` — the ``RingKV`` layout does, mapping its wrapped
+    rows onto the kernel's per-row vectors (see
+    :func:`_attention_via_kernel`), which is what lets the windowed decode
+    cache ride the same kernel as every linear layout; cross-attention with
+    meaningless positions is fine too since it is non-causal/unwindowed.
+    The jnp routes ignore ``kv_len`` — their masks come from the true
+    positions (``RingKV.slot_positions``).  Banded-local is a model-level
+    algorithm choice, so it stays on its jnp path regardless of the
+    resolved backend.
 
     ``k_scale``/``v_scale`` — per-(batch, kv_head) f32, paired with an int8
     ``k``/``v`` — reach the kernel's in-block dequant on the pallas route;
@@ -511,7 +527,7 @@ def attention(q, k, v, q_pos, k_pos, *, causal=True, window=None, softmax_scale=
         return _attention_via_kernel(q, k, v, q_pos, k_pos, causal=causal,
                                      window=window, q_block=q_block,
                                      kv_block=kv_block, k_scale=k_scale,
-                                     v_scale=v_scale)
+                                     v_scale=v_scale, kv_len=kv_len)
     if k_scale is not None:
         k = (k.astype(jnp.float32) * k_scale[:, None, :, None]).astype(q.dtype)
         v = (v.astype(jnp.float32) * v_scale[:, None, :, None]).astype(q.dtype)
@@ -547,29 +563,18 @@ def kv_cache_dtype(default):
     return default, False
 
 
-def cache_write(cache, new, write_at):
-    """Write ``new`` (b, s, kvh, hd) into the linear cache at sequence
-    offset ``write_at`` — a scalar (lockstep decode: every row at the same
-    depth) or a (b,) vector (continuous batching: each slot at its own
-    depth, one vmapped per-row dynamic slice)."""
-    if jnp.ndim(write_at) == 0:
-        return jax.lax.dynamic_update_slice_in_dim(cache, new, write_at,
-                                                   axis=1)
-    return jax.vmap(
-        lambda c, n, w: jax.lax.dynamic_update_slice_in_dim(c, n, w, axis=0)
-    )(cache, new, write_at)
-
-
 def kv_scale(x, valid=None):
     """Per-(batch, kv_head) symmetric int8 scale for a (b, s, kvh, hd) k or v
     slab: absmax / 127, floored so an all-zero head still divides cleanly.
-    ``valid`` (optional, traced ok) restricts the absmax to the first
-    ``valid`` sequence positions — a zero-padded prefill chunk must not let
-    pad-token k/v widen the scales that the rest of the request will
-    quantize with."""
+    ``valid`` (optional, traced ok; scalar or per-row (b,)) restricts the
+    absmax to the first ``valid`` sequence positions — a zero-padded prefill
+    chunk must not let pad-token k/v widen the scales that the rest of the
+    request will quantize with."""
     ax = jnp.abs(x.astype(jnp.float32))
     if valid is not None:
-        ok = jnp.arange(x.shape[1])[None, :, None, None] < valid
+        v = jnp.asarray(valid)
+        v = v[:, None, None, None] if v.ndim == 1 else v
+        ok = jnp.arange(x.shape[1])[None, :, None, None] < v
         ax = jnp.where(ok, ax, 0.0)
     amax = jnp.max(ax, axis=(1, 3))  # (b, kvh)
     return jnp.maximum(amax / 127.0, 1e-8)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import common
+from repro.models import cache as dcache
 from repro.models.base import Model, RunOptions, maybe_remat, right_shift, stacked_init
 from repro.models.moe_layer import moe_ffn
 
@@ -105,7 +106,7 @@ class DenseLM(Model):
 
         ``q_pos`` may be per-row (b, s) — continuous-batching decode, every
         slot at its own depth — in which case ``write_at`` is a (b,) vector
-        too (see ``common.cache_write``).  ``chunked`` marks a continuation
+        too (see ``cache.linear_write``).  ``chunked`` marks a continuation
         prefill chunk: the fresh k/v is written into the cache and attention
         runs over the cache prefix (causally masked to ``q_pos``) instead of
         the fresh slab, so a long prompt streams in fixed-size chunks.
@@ -138,14 +139,21 @@ class DenseLM(Model):
         quantized = k_cache is not None and k_cache.dtype == jnp.int8
         if quantized and s > 1 and not chunked:
             # prefill: calibrate the per-(b, kvh) scales on the real k/v —
-            # restricted to calib_len positions when the chunk is zero-padded
-            k_scale = common.kv_scale(k, calib_len)
-            v_scale = common.kv_scale(v, calib_len)
+            # restricted to calib_len positions when the chunk is zero-padded.
+            # Per-row calib_len means a batched first-chunk launch: rows with
+            # no valid tokens (parked mid-decode) keep their stored scales
+            ck = common.kv_scale(k, calib_len)
+            cv = common.kv_scale(v, calib_len)
+            if calib_len is not None and jnp.ndim(calib_len) == 1:
+                live = calib_len > 0
+                ck = dcache.masked_rows(live, ck, k_scale)
+                cv = dcache.masked_rows(live, cv, v_scale)
+            k_scale, v_scale = ck, cv
         if k_cache is not None:
             kw = common.quantize_kv(k, k_scale) if quantized else k
             vw = common.quantize_kv(v, v_scale) if quantized else v
-            k_cache = common.cache_write(k_cache, kw, write_at)
-            v_cache = common.cache_write(v_cache, vw, write_at)
+            k_cache = dcache.linear_write(k_cache, kw, write_at)
+            v_cache = dcache.linear_write(v_cache, vw, write_at)
         att_scales = {}
         if k_cache is not None and (s == 1 or chunked):
             # decode / continuation chunk: attend over the cache (the fresh
@@ -253,84 +261,82 @@ class DenseLM(Model):
 
     # -- inference -----------------------------------------------------------
     def init_cache(self, batch_size, max_len):
-        """KV cache, optionally quantized: under the policy's attention
-        ``kv_dtype=int8`` variant the k/v slabs are int8 with per-layer
-        per-(batch, kv_head) f32 scales stored alongside (calibrated at
-        prefill) — a quarter of the cache bytes, dequantized inside the
-        attention kernel's block load."""
+        """``LinearKV`` cache (layer-stacked slabs, per-row positions),
+        optionally quantized: under the policy's attention ``kv_dtype=int8``
+        variant the k/v slabs are int8 with per-layer per-(batch, kv_head)
+        f32 scales stored alongside (calibrated at prefill) — a quarter of
+        the cache bytes, dequantized inside the attention kernel's block
+        load."""
         cfg = self.cfg
-        shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim_)
         dtype, quantized = common.kv_cache_dtype(cfg.activation_dtype)
-        cache = {
-            "k": jnp.zeros(shape, dtype),
-            "v": jnp.zeros(shape, dtype),
-        }
-        if quantized:
-            sshape = (cfg.n_layers, batch_size, cfg.n_kv_heads)
-            cache["k_scale"] = jnp.ones(sshape, jnp.float32)
-            cache["v_scale"] = jnp.ones(sshape, jnp.float32)
-        return cache
+        return dcache.LinearKV.create(
+            (cfg.n_layers,), batch_size, max_len, cfg.n_kv_heads,
+            cfg.head_dim_, dtype, quantized=quantized)
 
     @staticmethod
-    def _cache_tuple(cache):
-        if "k_scale" in cache:
-            return (cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
-        return (cache["k"], cache["v"])
+    def _cache_tuple(kv: dcache.LinearKV):
+        if kv.quantized:
+            return (kv.k, kv.v, kv.k_scale, kv.v_scale)
+        return (kv.k, kv.v)
 
     @staticmethod
-    def _cache_dict(ys):
-        if len(ys) == 4:
-            return {"k": ys[0], "v": ys[1], "k_scale": ys[2], "v_scale": ys[3]}
-        return {"k": ys[0], "v": ys[1]}
+    def _rebuild(kv: dcache.LinearKV, ys, new_pos):
+        scales = ({"k_scale": ys[2], "v_scale": ys[3]} if len(ys) == 4 else {})
+        return kv.replace(k=ys[0], v=ys[1], pos=new_pos, **scales)
 
     def prefill(self, params, batch, max_len):
-        cfg = self.cfg
         tokens = batch["tokens"]
         b, s = tokens.shape
         q_pos = jnp.arange(s, dtype=jnp.int32)
         k_pos = jnp.arange(max_len, dtype=jnp.int32)
-        cache = self.init_cache(b, max_len)
+        kv = self.init_cache(b, max_len)
         x, ys, _ = self._backbone(
-            params, tokens, q_pos, k_pos, caches=self._cache_tuple(cache),
+            params, tokens, q_pos, k_pos, caches=self._cache_tuple(kv),
             write_at=0
         )
         logits = common.logits_matmul(x[:, -1], self._out_embed(params))
-        return logits, self._cache_dict(ys)
+        return logits, self._rebuild(kv, ys, jnp.full((b,), s, jnp.int32))
 
     def prefill_chunk(self, params, tokens, offset, cache, *, first=False,
-                      last_row=None):
+                      lens=None, extras=None):
         """One fixed-size chunk of a chunked prefill: write this chunk's k/v
-        at ``offset`` (traced — chunks never recompile) and attend causally.
-        The first chunk attends its fresh k/v (identical numerics to the
-        one-shot ``prefill``; an int8 cache calibrates its scales here, over
-        only the valid rows — pad tokens must not widen them);
-        continuation chunks attend the cache prefix.  ``last_row`` picks the
-        logits row (the prompt's true last token when the final chunk is
-        zero-padded up to the chunk size).  Returns (logits, new_cache)."""
+        at ``offset`` (traced — chunks never recompile; scalar or per-row)
+        and attend causally.  The first chunk attends its fresh k/v
+        (identical numerics to the one-shot ``prefill``; an int8 cache
+        calibrates its scales here, over only the valid tokens — pad must
+        not widen them); continuation chunks attend the cache prefix.
+        ``lens`` (b,) counts each row's valid tokens — 0 parks a row, whose
+        garbage k/v lands only at positions its own future writes overwrite
+        before anything attends them.  Returns per-row last-valid-token
+        logits (b, V) and the cache."""
         b, s = tokens.shape
-        max_len = cache["k"].shape[2]
-        q_pos = offset + jnp.arange(s, dtype=jnp.int32)
-        k_pos = jnp.arange(max_len, dtype=jnp.int32)
-        row = s - 1 if last_row is None else last_row
+        offset = jnp.asarray(offset, jnp.int32)
+        q_pos = (offset[:, None] if offset.ndim else offset) + \
+            jnp.arange(s, dtype=jnp.int32)
+        k_pos = jnp.arange(cache.capacity, dtype=jnp.int32)
         x, ys, _ = self._backbone(
             params, tokens, q_pos, k_pos, caches=self._cache_tuple(cache),
-            write_at=offset, chunked=not first, calib_len=row + 1
+            write_at=offset, chunked=not first,
+            calib_len=s if lens is None else lens
         )
-        logits = common.logits_matmul(x[:, row], self._out_embed(params))
-        return logits, self._cache_dict(ys)
+        logits = common.logits_matmul(dcache.pick_last(x, lens),
+                                      self._out_embed(params))
+        new_pos = jnp.broadcast_to(
+            offset + (s if lens is None else jnp.asarray(lens, jnp.int32)),
+            (b,))
+        return logits, self._rebuild(cache, ys, new_pos)
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
-        cfg = self.cfg
         b = tokens.shape[0]
-        max_len = cache["k"].shape[2]
         pos = jnp.asarray(pos, jnp.int32)
         # scalar pos: lockstep decode; (b,) pos: continuous batching — each
         # row queries and writes at its own depth (per-row kernel lanes)
         q_pos = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
-        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        k_pos = jnp.arange(cache.capacity, dtype=jnp.int32)
         x, ys, _ = self._backbone(
             params, tokens, q_pos, k_pos, caches=self._cache_tuple(cache),
             write_at=pos
         )
         logits = common.logits_matmul(x[:, -1], self._out_embed(params))
-        return logits, self._cache_dict(ys)
+        return logits, self._rebuild(cache, ys,
+                                     jnp.broadcast_to(pos + 1, (b,)))

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common
+from repro.models import cache as dcache
 from repro.models.base import Model, maybe_remat, right_shift, stacked_init
 
 
@@ -124,8 +125,8 @@ class EncDecLM(Model):
             h = common.rms_norm(x, pl["ln1"], cfg.norm_eps)
             q, k, v = self._proj_qkv(pl["self_attn"], h, h, q_pos, q_pos)
             if kc is not None:
-                kc = common.cache_write(kc, k, write_at)
-                vc = common.cache_write(vc, v, write_at)
+                kc = dcache.linear_write(kc, k, write_at)
+                vc = dcache.linear_write(vc, v, write_at)
                 k, v = kc, vc
             o = common.attention(q, k, v, q_pos, k_pos, causal=True,
                                  block_threshold=max(self.opts.q_block, self.opts.kv_block))
@@ -196,14 +197,16 @@ class EncDecLM(Model):
     def init_cache(self, batch_size, max_len):
         cfg = self.cfg
         dt = cfg.activation_dtype
-        enc_len = self.enc_len(max_len)
-        kv = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim_)
-        xkv = (cfg.n_layers, batch_size, enc_len, cfg.n_kv_heads, cfg.head_dim_)
-        return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
-                "xk": jnp.zeros(xkv, dt), "xv": jnp.zeros(xkv, dt)}
+        return {
+            "self": dcache.LinearKV.create(
+                (cfg.n_layers,), batch_size, max_len, cfg.n_kv_heads,
+                cfg.head_dim_, dt),
+            "cross": dcache.CrossKV.create(
+                (cfg.n_layers,), batch_size, self.enc_len(max_len),
+                cfg.n_kv_heads, cfg.head_dim_, dt),
+        }
 
     def prefill(self, params, batch, max_len):
-        cfg = self.cfg
         tokens, frames = batch["tokens"], batch["audio_frames"]
         b, s = tokens.shape
         q_pos = jnp.arange(s, dtype=jnp.int32)
@@ -212,22 +215,64 @@ class EncDecLM(Model):
         xk, xv = self._all_cross_kv(params, enc_out)
         cache = self.init_cache(b, max_len)
         x, (kc, vc) = self._decoder(params, tokens, None, q_pos, k_pos,
-                                    caches=(cache["k"], cache["v"]), write_at=0,
-                                    cross_kv=(xk, xv))
+                                    caches=(cache["self"].k, cache["self"].v),
+                                    write_at=0, cross_kv=(xk, xv))
         logits = common.logits_matmul(x[:, -1], params["lm_head"])
-        return logits, {"k": kc, "v": vc, "xk": xk, "xv": xv}
+        return logits, {
+            "self": cache["self"].replace(k=kc, v=vc,
+                                          pos=jnp.full((b,), s, jnp.int32)),
+            "cross": cache["cross"].replace(k=xk, v=xv),
+        }
+
+    def prefill_chunk(self, params, tokens, offset, cache, *, first=False,
+                      lens=None, extras=None):
+        """Chunked prefill: the first chunk runs the (whole-utterance)
+        encoder and freezes each live row's cross-attention k/v — rows with
+        ``lens = 0`` keep their stored slabs, so a batched first-chunk
+        launch cannot clobber a mid-decode neighbour — and every chunk
+        writes self-attention k/v at its per-row offset and attends the
+        cache prefix causally."""
+        b, s = tokens.shape
+        self_kv, cross = cache["self"], cache["cross"]
+        offset = jnp.asarray(offset, jnp.int32)
+        q_pos = (offset[:, None] if offset.ndim else offset) + \
+            jnp.arange(s, dtype=jnp.int32)
+        k_pos = jnp.arange(self_kv.capacity, dtype=jnp.int32)
+        if first:
+            enc_out = self._encoder(params, extras["audio_frames"])
+            xk, xv = self._all_cross_kv(params, enc_out)
+            if lens is not None:
+                live = jnp.asarray(lens) > 0
+                xk = dcache.masked_rows(live, xk, cross.k, axis=1)
+                xv = dcache.masked_rows(live, xv, cross.v, axis=1)
+            cross = cross.replace(k=xk, v=xv)
+        x, (kc, vc) = self._decoder(params, tokens, None, q_pos, k_pos,
+                                    caches=(self_kv.k, self_kv.v),
+                                    write_at=offset,
+                                    cross_kv=(cross.k, cross.v))
+        logits = common.logits_matmul(dcache.pick_last(x, lens),
+                                      params["lm_head"])
+        new_pos = jnp.broadcast_to(
+            offset + (s if lens is None else jnp.asarray(lens, jnp.int32)),
+            (b,))
+        return logits, {"self": self_kv.replace(k=kc, v=vc, pos=new_pos),
+                        "cross": cross}
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
-        max_len = cache["k"].shape[2]
+        b = tokens.shape[0]
+        self_kv, cross = cache["self"], cache["cross"]
         pos = jnp.asarray(pos, jnp.int32)
         # scalar: lockstep; (b,) vector: per-row continuous-batching decode
         q_pos = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
-        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        k_pos = jnp.arange(self_kv.capacity, dtype=jnp.int32)
         x, (kc, vc) = self._decoder(params, tokens, None, q_pos, k_pos,
-                                    caches=(cache["k"], cache["v"]), write_at=pos,
-                                    cross_kv=(cache["xk"], cache["xv"]))
+                                    caches=(self_kv.k, self_kv.v),
+                                    write_at=pos,
+                                    cross_kv=(cross.k, cross.v))
         logits = common.logits_matmul(x[:, -1], params["lm_head"])
-        return logits, {"k": kc, "v": vc, "xk": cache["xk"], "xv": cache["xv"]}
+        new_self = self_kv.replace(k=kc, v=vc,
+                                   pos=jnp.broadcast_to(pos + 1, (b,)))
+        return logits, {"self": new_self, "cross": cross}
 
     def batch_extras_specs(self, batch_size, seq_len):
         cfg = self.cfg

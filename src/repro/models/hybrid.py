@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common
+from repro.models import cache as dcache
 from repro.models.base import Model, maybe_remat, right_shift, stacked_init
 
 LRU_C = 8.0  # RG-LRU exponent constant from Griffin
@@ -42,9 +43,12 @@ def block_diag_linear(x, w):
     return jnp.einsum("...hi,hij->...hj", x, w)
 
 
-def causal_conv1d(x, w, state=None):
+def causal_conv1d(x, w, state=None, lens=None):
     """Depthwise causal conv.  x: (b, s, w); w: (k, w).
-    state: (b, k-1, w) previous inputs (decode).  Returns (y, new_state)."""
+    state: (b, k-1, w) previous inputs (decode).  ``lens`` (b,) restricts
+    the new state to each row's valid prefix (padded chunk: row r has
+    consumed ``lens[r]`` real tokens; ``lens = 0`` keeps the old state).
+    Returns (y, new_state)."""
     k = w.shape[0]
     if state is None:
         pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
@@ -52,7 +56,12 @@ def causal_conv1d(x, w, state=None):
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)  # (b, s+k-1, w)
     y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
-    new_state = xp[:, -(k - 1):] if k > 1 else None
+    if k <= 1:
+        new_state = None
+    elif lens is None:
+        new_state = xp[:, -(k - 1):]
+    else:
+        new_state = dcache.conv_tail(xp, lens, k - 1)
     return y, new_state
 
 
@@ -116,8 +125,14 @@ class HybridLM(Model):
         }
 
     # -- blocks ----------------------------------------------------------------
-    def _rec_block(self, pl, x, lru_state=None, conv_state=None):
-        """Returns (x, new_lru_state, new_conv_state)."""
+    def _rec_block(self, pl, x, lru_state=None, conv_state=None, lens=None):
+        """Returns (x, new_lru_state, new_conv_state).
+
+        ``lens`` (b,) restricts the state update to each row's valid
+        prefix (padded chunk / parked engine row): pad steps carry the
+        LRU identity (a = 1, b = 0 — ``h`` holds) and the conv state
+        slices at the valid tail, so a ``lens = 0`` row's state passes
+        through bitwise-untouched."""
         cfg = self.cfg
         b, s, d = x.shape
         w = cfg.lru_width
@@ -127,16 +142,21 @@ class HybridLM(Model):
         branch = common.constrain(jnp.einsum("bsd,dw->bsw", h, pl["w_x"]), "batch", "*", "ffn")
         gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, pl["w_gate_branch"]).astype(jnp.float32))
         gate = common.constrain(gate, "batch", "*", "ffn")
-        y, new_conv = causal_conv1d(branch, pl["conv_w"], conv_state)
+        y, new_conv = causal_conv1d(branch, pl["conv_w"], conv_state, lens=lens)
 
         # RG-LRU gates (block-diagonal linears, fp32)
         yh = y.astype(jnp.float32).reshape(b, s, nh, wb)
         r = jax.nn.sigmoid(block_diag_linear(yh, pl["lru_a_gate"])).reshape(b, s, w)
         i = jax.nn.sigmoid(block_diag_linear(yh, pl["lru_i_gate"])).reshape(b, s, w)
         log_a = -LRU_C * jax.nn.softplus(pl["lru_a_param"]) * r  # (b, s, w)
-        a = jnp.exp(log_a)
         gated_in = i * y.astype(jnp.float32)
         bterm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_in
+        tok = dcache.token_mask(lens, s)
+        if tok is not None:
+            # pad tokens are scan identities: a = exp(0) = 1, b = 0
+            log_a = jnp.where(tok[..., None], log_a, 0.0)
+            bterm = jnp.where(tok[..., None], bterm, 0.0)
+        a = jnp.exp(log_a)
 
         if s == 1 and lru_state is not None:
             hseq = a * lru_state[:, None] + bterm  # single decode step
@@ -150,7 +170,8 @@ class HybridLM(Model):
         x = x + common.gated_mlp(h2, pl["w_mlp_gate"], pl["w_mlp_up"], pl["w_mlp_down"])
         return x, new_state, new_conv
 
-    def _attn_block(self, pl, x, q_pos, k_pos, kc=None, vc=None, write_at=None):
+    def _attn_block(self, pl, x, q_pos, k_pos, kc=None, vc=None, write_at=None,
+                    ring=False, chunked=False, kv_len=None):
         cfg = self.cfg
         b, s, d = x.shape
         hd = cfg.head_dim_
@@ -165,43 +186,34 @@ class HybridLM(Model):
         q = common.apply_rope(q, q_pos, cfg.rope_theta)
         k = common.apply_rope(k, q_pos, cfg.rope_theta)
         if kc is not None:
-            cache_len = kc.shape[1]
-            if s > cache_len:
-                # ring-buffer prefill: keep only the last W positions; slot of
-                # position p is p mod W, i.e. roll the tail by (end % W)
-                shift = (write_at + s) % cache_len
-                kc = jnp.roll(k[:, -cache_len:], shift, axis=1)
-                vc = jnp.roll(v[:, -cache_len:], shift, axis=1)
+            if ring:
+                kc = dcache.ring_write(kc, k, write_at)
+                vc = dcache.ring_write(vc, v, write_at)
             else:
-                kc = jax.lax.dynamic_update_slice_in_dim(kc, k, write_at, axis=1)
-                vc = jax.lax.dynamic_update_slice_in_dim(vc, v, write_at, axis=1)
-            if s > 1:
+                kc = dcache.linear_write(kc, k, write_at)
+                vc = dcache.linear_write(vc, v, write_at)
+            if s == 1 or chunked:
+                k_att, v_att, kp = kc, vc, k_pos
+            else:
                 # prefill: attend over the fresh (in-order) k/v; the cache is
                 # output-only here
                 k_att, v_att, kp = k, v, q_pos
-            else:
-                k_att, v_att, kp = kc, vc, k_pos
         else:
             k_att, v_att, kp = k, v, k_pos
-        # the ring-buffer decode cache is the one path that may not take the
-        # kernel route: slot j holds position (write_at + j) mod W — a
-        # *rotation*, violating the flash kernel's contiguous-positions
-        # contract (it would causally mask the rolled-over half of the
-        # window).  A scoped policy pin records the exception; every other
-        # path (train, prefill, linear-cache decode) follows the ambient
-        # policy like the rest of the model
-        from repro.kernels import policy  # lazy: kernels stay out of model import
-
-        ring = bool(kc is not None and s == 1
-                    and self.opts.windowed_decode_cache and cfg.sliding_window)
-        with policy.pin_if(ring, "attention", "jnp",
-                           reason="ring-buffer decode cache: slot order is a "
-                                  "rotation of positions, outside the flash "
-                                  "kernel's contiguous-positions contract"):
-            o = common.attention(q, k_att, v_att, q_pos, kp, causal=True,
-                                 window=cfg.sliding_window,
-                                 use_banded_local=self.opts.use_banded_local and kc is None,
-                                 block_threshold=max(self.opts.q_block, self.opts.kv_block))
+        # Ring decode rides the SAME flash kernel as every linear layout:
+        # RingKV's wrap-aware mapping supplies kv_len = min(pos+1, C) with
+        # q_offset = pos, so an unwrapped row attends its contiguous prefix
+        # and a wrapped row attends the whole ring (slot order is a softmax
+        # permutation; C <= window keeps every live slot in-window, so the
+        # static window mask is dropped and the jnp oracle masks causally
+        # over RingKV.slot_positions instead).
+        attend_ring = kc is not None and ring and (s == 1 or chunked)
+        window = None if attend_ring else cfg.sliding_window
+        o = common.attention(q, k_att, v_att, q_pos, kp, causal=True,
+                             window=window,
+                             kv_len=kv_len if attend_ring else None,
+                             use_banded_local=self.opts.use_banded_local and kc is None,
+                             block_threshold=max(self.opts.q_block, self.opts.kv_block))
         x = x + common.constrain(common.attn_out_project(o, pl["wo"]),
                                  "batch", "seq", "*")
         h2 = common.rms_norm(x, pl["ln2"], cfg.norm_eps)
@@ -209,38 +221,39 @@ class HybridLM(Model):
         return x, (kc, vc)
 
     # -- forward ------------------------------------------------------------------
-    def _backbone(self, params, tokens, q_pos, k_pos, *, cache=None, write_at=None):
+    def _backbone(self, params, tokens, q_pos, k_pos, *, cache=None,
+                  write_at=None, lens=None, chunked=False, kv_len=None):
         cfg = self.cfg
         x = common.embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
         x = common.constrain(x, "batch", "seq", "*")
         if cfg.scale_embeddings:
             x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        ring = cache is not None and isinstance(cache["kv"], dcache.RingKV)
 
         def superblock(carry, xs):
             x = carry
             if cache is None:
                 p1, p2, pa = xs
-                st = {}
+                l1 = c1 = l2 = c2 = kc = vc = None
             else:
-                p1, p2, pa, st = xs
-            x, s1, c1 = self._rec_block(p1, x, st.get("lru1"), st.get("conv1"))
-            x, s2, c2 = self._rec_block(p2, x, st.get("lru2"), st.get("conv2"))
-            x, (kc, vc) = self._attn_block(pa, x, q_pos, k_pos,
-                                           st.get("k"), st.get("v"), write_at)
-            ys = None
-            if cache is not None:
-                ys = {"lru1": s1, "conv1": c1, "lru2": s2, "conv2": c2, "k": kc, "v": vc}
+                p1, p2, pa, l1, c1, l2, c2, kc, vc = xs
+            x, s1, nc1 = self._rec_block(p1, x, l1, c1, lens=lens)
+            x, s2, nc2 = self._rec_block(p2, x, l2, c2, lens=lens)
+            x, (kc2, vc2) = self._attn_block(pa, x, q_pos, k_pos, kc, vc,
+                                             write_at, ring=ring,
+                                             chunked=chunked, kv_len=kv_len)
+            ys = None if cache is None else (s1, nc1, s2, nc2, kc2, vc2)
             return x, ys
 
         def tail_block(carry, xs):
             x = carry
             if cache is None:
                 pl = xs
-                st = {}
+                l = c = None
             else:
-                pl, st = xs
-            x, s1, c1 = self._rec_block(pl, x, st.get("lru"), st.get("conv"))
-            ys = None if cache is None else {"lru": s1, "conv": c1}
+                pl, l, c = xs
+            x, s1, c1 = self._rec_block(pl, x, l, c, lens=lens)
+            ys = None if cache is None else (s1, c1)
             return x, ys
 
         sb = maybe_remat(superblock, self.opts) if cache is None else superblock
@@ -249,12 +262,28 @@ class HybridLM(Model):
         g = params["groups"]
         xs = (g["rec1"], g["rec2"], g["attn"])
         if cache is not None:
-            xs = xs + (cache["groups"],)
+            st = cache["state"].states
+            kv = cache["kv"]
+            xs = xs + (st["lru1"], st["conv1"], st["lru2"], st["conv2"],
+                       kv.k, kv.v)
         x, ys_g = jax.lax.scan(sb, x, xs)
-        xs_t = params["tail_rec"] if cache is None else (params["tail_rec"], cache["tail"])
+        if cache is None:
+            xs_t = params["tail_rec"]
+        else:
+            st = cache["state"].states
+            xs_t = (params["tail_rec"], st["tail_lru"], st["tail_conv"])
         x, ys_t = jax.lax.scan(tb, x, xs_t)
         x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
-        new_cache = None if cache is None else {"groups": ys_g, "tail": ys_t}
+        if cache is None:
+            return x, None
+        s1, c1, s2, c2, kc, vc = ys_g
+        tl, tc = ys_t
+        new_cache = {
+            "state": cache["state"].replace(states={
+                "lru1": s1, "conv1": c1, "lru2": s2, "conv2": c2,
+                "tail_lru": tl, "tail_conv": tc}),
+            "kv": cache["kv"].replace(k=kc, v=vc),
+        }
         return x, new_cache
 
     def loss(self, params, batch):
@@ -266,59 +295,91 @@ class HybridLM(Model):
         return common.chunked_softmax_xent(x, params["embed"], labels, chunk=self.opts.ce_chunk)
 
     # -- inference -------------------------------------------------------------------
-    def _attn_cache_len(self, max_len):
+    @property
+    def _ring_mode(self):
         # local attention never looks back further than the window
-        if self.opts.windowed_decode_cache and self.cfg.sliding_window:
-            return min(max_len, self.cfg.sliding_window)
-        return max_len
+        return bool(self.opts.windowed_decode_cache and self.cfg.sliding_window)
 
     def init_cache(self, batch_size, max_len):
         cfg = self.cfg
         dt = cfg.activation_dtype
         w, kcw = cfg.lru_width, cfg.conv1d_width
         n_sb, n_tail = self._n_super, self._n_tail
-        s_att = self._attn_cache_len(max_len)
-        kv = (n_sb, batch_size, s_att, cfg.n_kv_heads, cfg.head_dim_)
-        return {
-            "groups": {
-                "lru1": jnp.zeros((n_sb, batch_size, w), jnp.float32),
-                "conv1": jnp.zeros((n_sb, batch_size, kcw - 1, w), dt),
-                "lru2": jnp.zeros((n_sb, batch_size, w), jnp.float32),
-                "conv2": jnp.zeros((n_sb, batch_size, kcw - 1, w), dt),
-                "k": jnp.zeros(kv, dt),
-                "v": jnp.zeros(kv, dt),
-            },
-            "tail": {
-                "lru": jnp.zeros((n_tail, batch_size, w), jnp.float32),
-                "conv": jnp.zeros((n_tail, batch_size, kcw - 1, w), dt),
-            },
-        }
+        state = dcache.StateCarry.create({
+            "lru1": jnp.zeros((n_sb, batch_size, w), jnp.float32),
+            "conv1": jnp.zeros((n_sb, batch_size, kcw - 1, w), dt),
+            "lru2": jnp.zeros((n_sb, batch_size, w), jnp.float32),
+            "conv2": jnp.zeros((n_sb, batch_size, kcw - 1, w), dt),
+            "tail_lru": jnp.zeros((n_tail, batch_size, w), jnp.float32),
+            "tail_conv": jnp.zeros((n_tail, batch_size, kcw - 1, w), dt),
+        })
+        if self._ring_mode:
+            kv = dcache.RingKV.create(
+                (n_sb,), batch_size, min(max_len, cfg.sliding_window),
+                cfg.n_kv_heads, cfg.head_dim_, dt)
+        else:
+            kv = dcache.LinearKV.create(
+                (n_sb,), batch_size, max_len, cfg.n_kv_heads, cfg.head_dim_,
+                dt)
+        return {"state": state, "kv": kv}
 
     def prefill(self, params, batch, max_len):
-        cfg = self.cfg
         tokens = batch["tokens"]
         b, s = tokens.shape
         q_pos = jnp.arange(s, dtype=jnp.int32)
-        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        k_pos = jnp.arange(s, dtype=jnp.int32)
         cache = self.init_cache(b, max_len)
         x, new_cache = self._backbone(params, tokens, q_pos, k_pos, cache=cache, write_at=0)
         logits = common.logits_matmul(x[:, -1], params["embed"])
+        new_cache["kv"] = new_cache["kv"].replace(pos=jnp.full((b,), s, jnp.int32))
+        return logits, new_cache
+
+    def prefill_chunk(self, params, tokens, offset, cache, *, first=False,
+                      lens=None, extras=None):
+        """Chunked prefill against the linear layout (the engine path).
+        Ring mode is decode-only by construction — a windowed chunked
+        prefill would have to wrap-attend mid-prompt, and the engine serves
+        hybrid with the linear layout (the window is still enforced by the
+        attention mask)."""
+        if isinstance(cache["kv"], dcache.RingKV):
+            raise NotImplementedError(
+                "chunked prefill over the RingKV layout: serve hybrid with "
+                "windowed_decode_cache=False (window enforced by masking)")
+        b, s = tokens.shape
+        offset = jnp.asarray(offset, jnp.int32)
+        q_pos = (offset[:, None] if offset.ndim else offset) + \
+            jnp.arange(s, dtype=jnp.int32)
+        k_pos = jnp.arange(cache["kv"].capacity, dtype=jnp.int32)
+        x, new_cache = self._backbone(params, tokens, q_pos, k_pos,
+                                      cache=cache, write_at=offset,
+                                      lens=lens, chunked=not first)
+        logits = common.logits_matmul(dcache.pick_last(x, lens),
+                                      params["embed"])
+        new_pos = jnp.broadcast_to(
+            offset + (s if lens is None else jnp.asarray(lens, jnp.int32)),
+            (b,))
+        new_cache["kv"] = new_cache["kv"].replace(pos=new_pos)
         return logits, new_cache
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
-        cfg = self.cfg
-        max_len = cache["groups"]["k"].shape[2]  # (n_sb, b, S, kvh, hd)
-        q_pos = jnp.full((1,), pos, jnp.int32)
-        if self.opts.windowed_decode_cache and cfg.sliding_window:
-            # ring buffer: slot j holds true position pos - ((pos - j) mod W)
-            idx = jnp.arange(max_len, dtype=jnp.int32)
-            ring_pos = pos - ((pos - idx) % max_len)
-            k_pos = jnp.where(ring_pos >= 0, ring_pos, -(1 << 30))
-            write_at = pos % max_len
+        b = tokens.shape[0]
+        kv = cache["kv"]
+        pos = jnp.asarray(pos, jnp.int32)
+        q_pos = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
+        if isinstance(kv, dcache.RingKV):
+            kv_len = kv.attend_lens(pos)        # per-row live-slot counts
+            k_pos = kv.slot_positions(pos)      # true positions (jnp oracle)
         else:
-            k_pos = jnp.arange(max_len, dtype=jnp.int32)
-            write_at = pos
-        x, new_cache = self._backbone(params, tokens, q_pos, k_pos, cache=cache,
-                                      write_at=write_at)
+            kv_len = None
+            k_pos = jnp.arange(kv.capacity, dtype=jnp.int32)
+        # parked engine rows (valid = False) carry their state through the
+        # step untouched; the lockstep path has every row valid, where the
+        # masking is the identity
+        lens = cache["state"].valid.astype(jnp.int32)
+        x, new_cache = self._backbone(params, tokens, q_pos, k_pos,
+                                      cache=cache, write_at=pos, lens=lens,
+                                      kv_len=kv_len)
         logits = common.logits_matmul(x[:, -1], params["embed"])
+        new_cache["kv"] = new_cache["kv"].replace(
+            pos=jnp.broadcast_to(pos + 1, (b,)))
         return logits, new_cache

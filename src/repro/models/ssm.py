@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common
+from repro.models import cache as dcache
 from repro.models.base import Model, maybe_remat, right_shift, stacked_init
 from repro.models.hybrid import causal_conv1d
 
@@ -119,8 +120,15 @@ class SSMLM(Model):
             "final_norm": jnp.zeros((d,), dt),
         }
 
-    def _mix(self, pl, x, *, conv_state=None, ssm_state=None, single_step=False):
-        """The Mamba2 mixer.  Returns (y, new_conv_state, new_ssm_state)."""
+    def _mix(self, pl, x, *, conv_state=None, ssm_state=None, single_step=False,
+             lens=None):
+        """The Mamba2 mixer.  Returns (y, new_conv_state, new_ssm_state).
+
+        ``lens`` (b,) restricts the state update to each row's valid prefix
+        (padded chunk / parked engine row): pad steps get dt = 0, i.e.
+        decay exp(0) = 1 and zero input — exact SSD scan identities — and
+        the conv state slices at the valid tail, so a ``lens = 0`` row's
+        state passes through bitwise-untouched."""
         cfg = self.cfg
         b, s, d = x.shape
         di, ds, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
@@ -128,11 +136,14 @@ class SSMLM(Model):
         zxbcdt = common.constrain(jnp.einsum("bsd,de->bse", x, pl["w_in"]),
                                   "batch", "*", "ffn")
         z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
-        xbc, new_conv = causal_conv1d(xbc, pl["conv_w"], conv_state)
+        xbc, new_conv = causal_conv1d(xbc, pl["conv_w"], conv_state, lens=lens)
         xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
         xs, B, C = jnp.split(xbc, [di, di + ds], axis=-1)
 
         dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + pl["dt_bias"])  # (b, s, nh)
+        tok = dcache.token_mask(lens, s)
+        if tok is not None:
+            dt_v = jnp.where(tok[..., None], dt_v, 0.0)
         A = -jnp.exp(pl["A_log"])  # (nh,)
         xh = xs.reshape(b, s, nh, hp).astype(jnp.float32)
         x_dt = xh * dt_v[..., None]
@@ -167,7 +178,8 @@ class SSMLM(Model):
         out = common.constrain(jnp.einsum("bse,ed->bsd", y, pl["w_out"]), "batch", "seq", "*")
         return out, new_conv, new_ssm
 
-    def _backbone(self, params, tokens, *, cache=None, single_step=False):
+    def _backbone(self, params, tokens, *, cache=None, single_step=False,
+                  lens=None):
         cfg = self.cfg
         x = common.embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
         x = common.constrain(x, "batch", "seq", "*")
@@ -178,17 +190,20 @@ class SSMLM(Model):
                 pl = xs
                 cs = ss = None
             else:
-                pl, st = xs
-                cs, ss = st["conv"], st["ssm"]
+                pl, cs, ss = xs
             h = common.rms_norm(x, pl["ln"], cfg.norm_eps)
-            y, nc, ns = self._mix(pl, h, conv_state=cs, ssm_state=ss, single_step=single_step)
-            ys = None if cache is None else {"conv": nc, "ssm": ns}
+            y, nc, ns = self._mix(pl, h, conv_state=cs, ssm_state=ss,
+                                  single_step=single_step, lens=lens)
+            ys = None if cache is None else (nc, ns)
             return x + y, ys
 
         fn = maybe_remat(layer_fn, self.opts) if cache is None else layer_fn
-        xs = params["layers"] if cache is None else (params["layers"], cache)
-        x, new_cache = jax.lax.scan(fn, x, xs)
+        xs = (params["layers"] if cache is None else
+              (params["layers"], cache.states["conv"], cache.states["ssm"]))
+        x, ys = jax.lax.scan(fn, x, xs)
         x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        new_cache = (None if cache is None else
+                     cache.replace(states={"conv": ys[0], "ssm": ys[1]}))
         return x, new_cache
 
     def loss(self, params, batch):
@@ -203,11 +218,11 @@ class SSMLM(Model):
         di, ds = cfg.ssm_d_inner, cfg.ssm_state
         nh, hp = cfg.ssm_n_heads, cfg.ssm_head_dim
         conv_dim = di + 2 * ds
-        return {
+        return dcache.StateCarry.create({
             "conv": jnp.zeros((cfg.n_layers, batch_size, cfg.conv1d_width - 1, conv_dim),
                               cfg.activation_dtype),
             "ssm": jnp.zeros((cfg.n_layers, batch_size, nh, hp, ds), jnp.float32),
-        }
+        })
 
     def prefill(self, params, batch, max_len):
         tokens = batch["tokens"]
@@ -217,7 +232,24 @@ class SSMLM(Model):
         logits = common.logits_matmul(x[:, -1], params["embed"])
         return logits, new_cache
 
+    def prefill_chunk(self, params, tokens, offset, cache, *, first=False,
+                      lens=None, extras=None):
+        """Position-free chunked prefill: the carried state IS the context,
+        so ``offset`` is ignored and chunks simply continue the scan.  Exact
+        engine<->lockstep parity holds when chunk boundaries land on
+        multiples of the SSD chunk (``cfg.ssm_chunk``): the pad tail of a
+        partial chunk contributes exact scan identities."""
+        x, new_cache = self._backbone(params, tokens, cache=cache, lens=lens)
+        logits = common.logits_matmul(dcache.pick_last(x, lens),
+                                      params["embed"])
+        return logits, new_cache
+
     def decode_step(self, params, tokens, pos, cache, extras=None):
-        x, new_cache = self._backbone(params, tokens, cache=cache, single_step=True)
+        # parked engine rows (valid = False) carry their state through the
+        # step untouched; the lockstep path has every row valid, where the
+        # masking is the identity
+        lens = cache.valid.astype(jnp.int32)
+        x, new_cache = self._backbone(params, tokens, cache=cache,
+                                      single_step=True, lens=lens)
         logits = common.logits_matmul(x[:, -1], params["embed"])
         return logits, new_cache

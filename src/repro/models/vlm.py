@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common
+from repro.models import cache as dcache
 from repro.models.base import Model, maybe_remat, right_shift, stacked_init
 
 
@@ -82,8 +83,8 @@ class VisionLM(Model):
         q = common.apply_rope(q, q_pos, cfg.rope_theta)
         k = common.apply_rope(k, q_pos, cfg.rope_theta)
         if kc is not None:
-            kc = common.cache_write(kc, k, write_at)
-            vc = common.cache_write(vc, v, write_at)
+            kc = dcache.linear_write(kc, k, write_at)
+            vc = dcache.linear_write(vc, v, write_at)
             k, v = kc, vc
         o = common.attention(q, k, v, q_pos, k_pos, causal=True,
                              block_threshold=max(self.opts.q_block, self.opts.kv_block))
@@ -176,13 +177,13 @@ class VisionLM(Model):
     # -- inference ---------------------------------------------------------------
     def init_cache(self, batch_size, max_len):
         cfg = self.cfg
-        shape = (self._n_super, self._n_self_per, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim_)
-        ik_shape = (self._n_super, batch_size, cfg.n_image_tokens, cfg.n_kv_heads, cfg.head_dim_)
         return {
-            "k": jnp.zeros(shape, cfg.activation_dtype),
-            "v": jnp.zeros(shape, cfg.activation_dtype),
-            "img_k": jnp.zeros(ik_shape, cfg.activation_dtype),
-            "img_v": jnp.zeros(ik_shape, cfg.activation_dtype),
+            "self": dcache.LinearKV.create(
+                (self._n_super, self._n_self_per), batch_size, max_len,
+                cfg.n_kv_heads, cfg.head_dim_, cfg.activation_dtype),
+            "img": dcache.CrossKV.create(
+                (self._n_super,), batch_size, cfg.n_image_tokens,
+                cfg.n_kv_heads, cfg.head_dim_, cfg.activation_dtype),
         }
 
     def _all_image_kv(self, params, img):
@@ -191,7 +192,6 @@ class VisionLM(Model):
         return jax.lax.map(per_layer, params["cross_layers"])
 
     def prefill(self, params, batch, max_len):
-        cfg = self.cfg
         tokens, img = batch["tokens"], batch["image_embeds"]
         b, s = tokens.shape
         q_pos = jnp.arange(s, dtype=jnp.int32)
@@ -200,25 +200,65 @@ class VisionLM(Model):
         img_k, img_v = self._all_image_kv(params, img)
         x, (kc, vc) = self._backbone(
             params, tokens, None, q_pos, k_pos,
-            caches=(cache["k"], cache["v"]), write_at=0, img_kv=(img_k, img_v),
+            caches=(cache["self"].k, cache["self"].v), write_at=0,
+            img_kv=(img_k, img_v),
         )
         logits = common.logits_matmul(x[:, -1], params["lm_head"])
-        return logits, {"k": kc, "v": vc, "img_k": img_k, "img_v": img_v}
+        return logits, {
+            "self": cache["self"].replace(k=kc, v=vc,
+                                          pos=jnp.full((b,), s, jnp.int32)),
+            "img": cache["img"].replace(k=img_k, v=img_v),
+        }
+
+    def prefill_chunk(self, params, tokens, offset, cache, *, first=False,
+                      lens=None, extras=None):
+        """Chunked prefill: the first chunk computes each live row's image
+        k/v from ``extras["image_embeds"]`` and freezes them (rows with
+        ``lens = 0`` keep their stored slabs); every chunk writes
+        self-attention k/v at its per-row offset and attends the cache
+        prefix causally."""
+        b, s = tokens.shape
+        self_kv, img = cache["self"], cache["img"]
+        offset = jnp.asarray(offset, jnp.int32)
+        q_pos = (offset[:, None] if offset.ndim else offset) + \
+            jnp.arange(s, dtype=jnp.int32)
+        k_pos = jnp.arange(self_kv.capacity, dtype=jnp.int32)
+        if first:
+            ik, iv = self._all_image_kv(params, extras["image_embeds"])
+            if lens is not None:
+                live = jnp.asarray(lens) > 0
+                ik = dcache.masked_rows(live, ik, img.k, axis=1)
+                iv = dcache.masked_rows(live, iv, img.v, axis=1)
+            img = img.replace(k=ik, v=iv)
+        x, (kc, vc) = self._backbone(
+            params, tokens, None, q_pos, k_pos,
+            caches=(self_kv.k, self_kv.v), write_at=offset,
+            img_kv=(img.k, img.v),
+        )
+        logits = common.logits_matmul(dcache.pick_last(x, lens),
+                                      params["lm_head"])
+        new_pos = jnp.broadcast_to(
+            offset + (s if lens is None else jnp.asarray(lens, jnp.int32)),
+            (b,))
+        return logits, {"self": self_kv.replace(k=kc, v=vc, pos=new_pos),
+                        "img": img}
 
     def decode_step(self, params, tokens, pos, cache, extras=None):
-        cfg = self.cfg
-        max_len = cache["k"].shape[3]
+        b = tokens.shape[0]
+        self_kv, img = cache["self"], cache["img"]
         pos = jnp.asarray(pos, jnp.int32)
         # scalar: lockstep; (b,) vector: per-row continuous-batching decode
         q_pos = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
-        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        k_pos = jnp.arange(self_kv.capacity, dtype=jnp.int32)
         x, (kc, vc) = self._backbone(
             params, tokens, None, q_pos, k_pos,
-            caches=(cache["k"], cache["v"]), write_at=pos,
-            img_kv=(cache["img_k"], cache["img_v"]),
+            caches=(self_kv.k, self_kv.v), write_at=pos,
+            img_kv=(img.k, img.v),
         )
         logits = common.logits_matmul(x[:, -1], params["lm_head"])
-        return logits, {"k": kc, "v": vc, "img_k": cache["img_k"], "img_v": cache["img_v"]}
+        new_self = self_kv.replace(k=kc, v=vc,
+                                   pos=jnp.broadcast_to(pos + 1, (b,)))
+        return logits, {"self": new_self, "img": img}
 
     def batch_extras_specs(self, batch_size, seq_len):
         cfg = self.cfg

@@ -1,0 +1,206 @@
+"""DecodeCache layouts: RingKV wrap-around kernel parity + layering.
+
+The RingKV layout maps a wrapped window buffer onto the flash kernel's
+per-row ``q_offset``/``kv_len`` SMEM vectors (raw slots + causal softmax
+permutation-invariance); these tests pin that mapping against a scalar
+python loop that gathers each row's live window in chronological order —
+per-row cursors at non-tile-aligned depths, wrapped and unwrapped rows in
+one launch, both the pallas and jnp routes.  The kernel's ``kv_len == 0``
+exact-zero contract and the int8 LinearKV scale path get the same oracle
+treatment.  A source-level layering test keeps cache mutation idioms out
+of the family modules — every slab write must go through
+``repro.models.cache``.
+"""
+import inspect
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import policy
+from repro.models import cache as dcache
+from repro.models import common
+
+
+def _rng_kv(rng, b, n, kvh, hd):
+    return rng.standard_normal((b, n, kvh, hd)).astype(np.float32)
+
+
+def _scalar_oracle(q, k_rows, v_rows):
+    """One row, one query token: python-loop softmax over the row's keys in
+    chronological order.  q (h, hd); k_rows/v_rows (n, kvh, hd)."""
+    h, hd = q.shape
+    kvh = k_rows.shape[1]
+    group = h // kvh
+    out = np.zeros((h, hd), np.float32)
+    for hh in range(h):
+        kk = k_rows[:, hh // group]            # (n, hd)
+        vv = v_rows[:, hh // group]
+        scores = kk @ q[hh] / np.sqrt(hd)
+        scores = scores - scores.max()
+        p = np.exp(scores)
+        p /= p.sum()
+        out[hh] = p @ vv
+    return out
+
+
+def _ring_fill(rng, b, cap, kvh, hd, positions):
+    """Build ring slabs holding each row's live window: token at position
+    ``p`` sits in slot ``p % cap``; dead slots hold garbage."""
+    k = rng.standard_normal((b, cap, kvh, hd)).astype(np.float32) * 100.0
+    v = rng.standard_normal((b, cap, kvh, hd)).astype(np.float32) * 100.0
+    tok_k, tok_v = {}, {}
+    for row, last in enumerate(positions):
+        n = min(last + 1, cap)
+        for p in range(last + 1 - n, last + 1):
+            tok_k[(row, p)] = rng.standard_normal((kvh, hd)).astype(np.float32)
+            tok_v[(row, p)] = rng.standard_normal((kvh, hd)).astype(np.float32)
+            k[row, p % cap] = tok_k[(row, p)]
+            v[row, p % cap] = tok_v[(row, p)]
+    return k, v, tok_k, tok_v
+
+
+# positions: wrapped at non-tile-aligned cursors (37, 53), exactly-full
+# (31), partial (5), and a fresh row (0) — one launch, per-row vectors
+RING_POSITIONS = [37, 5, 31, 0, 53, 12, 40, 7]
+
+
+@pytest.mark.parametrize("route", ["pallas", "jnp"])
+def test_ringkv_wrap_matches_scalar_oracle(route):
+    """The decode attend over a RingKV slab — kernel route via per-row
+    q_offset/kv_len, jnp route via slot_positions masking — equals the
+    scalar chronological-gather oracle on every row, wrapped or not."""
+    rng = np.random.default_rng(0)
+    b, cap, h, kvh, hd = len(RING_POSITIONS), 32, 4, 2, 64
+    positions = np.asarray(RING_POSITIONS, np.int32)
+    k, v, tok_k, tok_v = _ring_fill(rng, b, cap, kvh, hd, positions)
+    kv = dcache.RingKV(k=jnp.asarray(k), v=jnp.asarray(v),
+                       pos=jnp.asarray(positions), b_axis=0)
+    q = rng.standard_normal((b, 1, h, hd)).astype(np.float32)
+
+    with policy.apply(impl={"attention": route if route == "pallas"
+                            else "jnp"}):
+        out = common.attention(
+            jnp.asarray(q), kv.k, kv.v, jnp.asarray(positions)[:, None],
+            kv.slot_positions(positions), causal=True, window=None,
+            kv_len=kv.attend_lens(positions))
+    out = np.asarray(out)
+
+    for row, last in enumerate(positions):
+        n = min(last + 1, cap)
+        ps = range(last + 1 - n, last + 1)
+        k_rows = np.stack([tok_k[(row, p)] for p in ps])
+        v_rows = np.stack([tok_v[(row, p)] for p in ps])
+        want = _scalar_oracle(q[row, 0], k_rows, v_rows)
+        np.testing.assert_allclose(out[row, 0], want, rtol=2e-4, atol=2e-5,
+                                   err_msg=f"row {row} pos {last}")
+
+
+def test_kernel_zero_length_rows_emit_exact_zeros():
+    """The flash kernel's per-row contract: a lane with ``kv_len == 0``
+    attends nothing and emits EXACT zeros (the l_safe guard), while its
+    neighbours in the same launch are untouched."""
+    rng = np.random.default_rng(1)
+    b, s, h, kvh, hd = 4, 16, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, 1, h, hd)).astype(np.float32))
+    k = jnp.asarray(_rng_kv(rng, b, s, kvh, hd))
+    v = jnp.asarray(_rng_kv(rng, b, s, kvh, hd))
+    kv_len = jnp.asarray([5, 0, 16, 0], jnp.int32)
+    q_pos = jnp.maximum(kv_len - 1, 0)[:, None]
+    with policy.apply(impl={"attention": "pallas"}):
+        out = np.asarray(common.attention(
+            q, k, v, q_pos, jnp.arange(s, dtype=jnp.int32), causal=True,
+            kv_len=kv_len))
+    assert np.all(out[1] == 0.0) and np.all(out[3] == 0.0)
+    assert np.all(np.isfinite(out)) and np.any(out[0] != 0.0)
+
+
+def test_linearkv_int8_scales_match_dequant_oracle():
+    """Int8 LinearKV decode through the kernel's in-block dequant at ragged
+    per-row depths equals the scalar oracle over the up-front-dequantized
+    slab."""
+    rng = np.random.default_rng(2)
+    b, s, h, kvh, hd = 4, 32, 4, 2, 64
+    kf = _rng_kv(rng, b, s, kvh, hd)
+    vf = _rng_kv(rng, b, s, kvh, hd)
+    k_scale = np.abs(kf).max(axis=(1, 3)) / 127.0         # (b, kvh)
+    v_scale = np.abs(vf).max(axis=(1, 3)) / 127.0
+    k8 = np.clip(np.round(kf / k_scale[:, None, :, None]), -127, 127)
+    v8 = np.clip(np.round(vf / v_scale[:, None, :, None]), -127, 127)
+    pos = np.asarray([31, 3, 17, 0], np.int32)            # ragged depths
+    q = rng.standard_normal((b, 1, h, hd)).astype(np.float32)
+    with policy.apply(impl={"attention": "pallas"}):
+        out = np.asarray(common.attention(
+            jnp.asarray(q), jnp.asarray(k8, jnp.int8),
+            jnp.asarray(v8, jnp.int8), jnp.asarray(pos)[:, None],
+            jnp.arange(s, dtype=jnp.int32), causal=True,
+            k_scale=jnp.asarray(k_scale, jnp.float32),
+            v_scale=jnp.asarray(v_scale, jnp.float32)))
+    kd = k8 * k_scale[:, None, :, None]
+    vd = v8 * v_scale[:, None, :, None]
+    for row in range(b):
+        n = pos[row] + 1
+        want = _scalar_oracle(q[row, 0], kd[row, :n], vd[row, :n])
+        np.testing.assert_allclose(out[row, 0], want, rtol=2e-4, atol=2e-5,
+                                   err_msg=f"row {row}")
+
+
+def test_ring_write_places_and_wraps():
+    """ring_write lands position ``p`` in slot ``p % C`` for per-row
+    offsets, and an over-capacity write keeps exactly the last C tokens."""
+    b, cap, kvh, hd = 3, 8, 1, 4
+    slab = jnp.zeros((b, cap, kvh, hd))
+    s = 5
+    new = jnp.arange(b * s * kvh * hd, dtype=jnp.float32).reshape(
+        b, s, kvh, hd)
+    wa = jnp.asarray([0, 6, 13], jnp.int32)  # linear, wrapping, wrapped
+    got = np.asarray(dcache.ring_write(slab, new, wa))
+    for row, w in enumerate([0, 6, 13]):
+        for j in range(s):
+            np.testing.assert_array_equal(got[row, (w + j) % cap],
+                                          np.asarray(new)[row, j])
+    # s >= C: only the last C tokens survive, at their true slots
+    big = jnp.arange(b * 11 * kvh * hd, dtype=jnp.float32).reshape(
+        b, 11, kvh, hd)
+    got = np.asarray(dcache.ring_write(slab, big, jnp.zeros((b,), jnp.int32)))
+    for j in range(11 - cap, 11):
+        np.testing.assert_array_equal(got[0, j % cap], np.asarray(big)[0, j])
+
+
+def test_ringkv_slot_positions_and_attend_lens():
+    kv = dcache.RingKV(k=jnp.zeros((2, 4, 1, 2)), v=jnp.zeros((2, 4, 1, 2)),
+                       pos=jnp.asarray([5, 1], jnp.int32), b_axis=0)
+    sp = np.asarray(kv.slot_positions(kv.pos))
+    np.testing.assert_array_equal(sp[0], [4, 5, 2, 3])
+    big = 1 << 30
+    np.testing.assert_array_equal(sp[1], [0, 1, big, big])
+    np.testing.assert_array_equal(np.asarray(kv.attend_lens(kv.pos)), [4, 2])
+
+
+# -- layering: slab mutation stays inside repro.models.cache ------------------
+
+_FORBIDDEN = [
+    (r"dynamic_update_slice", "raw dynamic_update_slice on cache slabs"),
+    (r"jnp\.roll", "ring maintenance must use cache.ring_write"),
+    (r"""["']k["']\s*:""", "raw cache dict entry 'k'"),
+    (r"""["']v["']\s*:""", "raw cache dict entry 'v'"),
+    (r"""["']xk["']\s*:""", "raw cache dict entry 'xk'"),
+    (r"""["']img_k["']\s*:""", "raw cache dict entry 'img_k'"),
+]
+
+
+def test_family_modules_never_mutate_cache_slabs_directly():
+    """Every model family goes through the DecodeCache layouts and the
+    cache-module write helpers: no family source constructs raw k/v cache
+    dict entries or hand-rolls slab writes."""
+    from repro.models import dense, encdec, hybrid, ssm, vlm
+    for mod in (dense, hybrid, ssm, encdec, vlm):
+        src = inspect.getsource(mod)
+        for pat, why in _FORBIDDEN:
+            hits = [ln + 1 for ln, line in enumerate(src.splitlines())
+                    if re.search(pat, line)]
+            assert not hits, (
+                f"{mod.__name__} line(s) {hits}: {why} — route it through "
+                f"repro.models.cache")

@@ -2,12 +2,13 @@
 
 The acceptance bar for ``repro.launch.engine``: with greedy decoding the
 engine's per-request tokens are IDENTICAL, request-for-request, to running
-each request alone through the lockstep jitted path — fp32 and int8-KV —
-with chunked prefill interleaved between decode steps, and the per-row
-decode step compiles exactly once across ragged batch compositions.  The
-SlotScheduler's §4.7 round discipline (bounded steals per round,
-non-increasing round priorities, deterministic matching) is unit-tested
-without a model.
+each request alone through the lockstep jitted path — dense fp32 and
+int8-KV, hybrid, and ssm — with batched chunked prefill interleaved
+between decode steps, pressure eviction replaying evicted requests
+exactly, and the per-row decode step compiling exactly once across ragged
+batch compositions.  The SlotScheduler's §4.7 round discipline (bounded
+steals per round, non-increasing round priorities, deterministic matching)
+is unit-tested without a model.
 """
 import jax
 import numpy as np
@@ -18,14 +19,20 @@ from repro.kernels import policy
 from repro.launch.engine import Engine, SlotScheduler, check_lockstep_parity
 from repro.launch.mesh import make_debug_mesh
 from repro.launch.serve import Request
-from repro.models.base import RunOptions
+from repro.models.base import Model, RunOptions, UnsupportedFamilyError
 
 
-def _requests(n, *, seed=0, max_prompt=20, max_new=8, vocab=256):
-    """Mixed-length workload: ragged prompts, skewed generation budgets."""
+def _requests(n, *, seed=0, max_prompt=20, max_new=8, vocab=256, align=1):
+    """Mixed-length workload: ragged prompts, skewed generation budgets.
+    ``align`` rounds prompt lengths up to a multiple (ssm exactness needs
+    chunk boundaries on ``cfg.ssm_chunk`` multiples)."""
     rng = np.random.default_rng(seed)
-    return [Request(i, rng.integers(3, vocab,
-                                    rng.integers(4, max_prompt)).astype(np.int32),
+
+    def plen():
+        n_ = int(rng.integers(4, max_prompt))
+        return -(-n_ // align) * align
+
+    return [Request(i, rng.integers(3, vocab, plen()).astype(np.int32),
                     max_new=int(rng.integers(2, max_new + 1)))
             for i in range(n)]
 
@@ -45,11 +52,12 @@ def _clear_autotune_pin():
     autotune.set_mode(None)
 
 
-def _run_and_check(mesh, *, chunk, n_requests=6, slots=3):
-    cfg = get_smoke_config("qwen3-1.7b")
+def _run_and_check(mesh, *, chunk, n_requests=6, slots=3,
+                   arch="qwen3-1.7b", align=1, budget=None):
+    cfg = get_smoke_config(arch)
     engine = Engine(cfg, mesh, max_batch=slots, max_len=64, chunk=chunk,
-                    opts=RunOptions())
-    reqs = _requests(n_requests, vocab=cfg.vocab_size)
+                    cache_budget=budget, opts=RunOptions())
+    reqs = _requests(n_requests, vocab=cfg.vocab_size, align=align)
     out = engine.run(reqs)
     assert check_lockstep_parity(engine, reqs), \
         "engine tokens diverge from the run-alone lockstep baseline"
@@ -77,6 +85,59 @@ def test_engine_matches_lockstep_int8_kv(mesh):
     with policy.apply(impl={"attention": "pallas"},
                       variants={"attention": {"kv_dtype": "int8"}}):
         _run_and_check(mesh, chunk=24, n_requests=4)
+
+
+def test_engine_matches_lockstep_hybrid(mesh):
+    """The hybrid family through the SAME engine loop: LRU/conv state rows
+    park under identity updates (a=1, b=0) while neighbours prefill.  chunk
+    covers the longest prompt — the LRU h0-fold reassociates across chunk
+    boundaries, so single-chunk prefill is the fp-exact arm."""
+    _run_and_check(mesh, chunk=24, n_requests=4, arch="recurrentgemma-2b")
+
+
+def test_engine_matches_lockstep_ssm(mesh):
+    """The ssm family through the engine: SSD state is chunk-exact when
+    prompt and chunk lengths sit on ``cfg.ssm_chunk`` (= 8) multiples, so
+    aligned prompts decode token-identical to the run-alone baseline."""
+    _run_and_check(mesh, chunk=16, n_requests=4, arch="mamba2-370m",
+                   align=8)
+
+
+def test_engine_pressure_eviction_requeues_and_finishes(mesh):
+    """Eviction under memory pressure: a context budget below the
+    workload's working set forces >= 1 eviction; the evicted request
+    re-queues through match_round, replays its generated tokens inside the
+    re-prefilled prompt, and every request still finishes with its exact
+    lockstep tokens."""
+    engine, reqs, out = _run_and_check(mesh, chunk=8, budget=40)
+    tel = out["telemetry"]
+    assert tel["pressure_evictions"] >= 1
+    assert tel["matches"] == len(reqs) + tel["pressure_evictions"]
+    assert tel["evictions"] == len(reqs)  # completion releases only
+    assert all(len(r.out) == r.max_new for r in reqs)
+
+
+def test_engine_batched_prefill_shares_launches(mesh):
+    """Batched chunked prefill: with more fresh admissions than one, a
+    single padded chunk launch serves >= 2 prefilling slots (chunk-rows
+    strictly exceed launches)."""
+    _, _, out = _run_and_check(mesh, chunk=8)
+    assert out["prefill_chunk_rows"] > out["prefill_chunks"]
+
+
+def test_engine_unsupported_family_is_structured(mesh, monkeypatch):
+    """A model stripped of a serving-contract method fails Engine
+    construction with UnsupportedFamilyError carrying the family and the
+    missing method name — not an attribute error mid-serve."""
+    from repro.models import dense as dense_mod
+    monkeypatch.setattr(dense_mod.DenseLM, "prefill_chunk",
+                        Model.prefill_chunk)
+    cfg = get_smoke_config("qwen3-1.7b")
+    with pytest.raises(UnsupportedFamilyError) as ei:
+        Engine(cfg, mesh, max_batch=2, max_len=32, chunk=8,
+               opts=RunOptions())
+    assert ei.value.family == "dense"
+    assert ei.value.missing == "prefill_chunk"
 
 
 def test_engine_decode_compiles_once(mesh):

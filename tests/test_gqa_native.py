@@ -288,11 +288,11 @@ def test_dense_int8_cache_prefill_decode():
 
     with policy.apply(variants={"attention": {"kv_dtype": "int8"}}):
         logits_q, cache_q = model.prefill(params, batch, 32)
-        assert cache_q["k"].dtype == jnp.int8
-        assert cache_q["k_scale"].shape == (cfg.n_layers, 2, cfg.n_kv_heads)
+        assert cache_q.k.dtype == jnp.int8
+        assert cache_q.k_scale.shape == (cfg.n_layers, 2, cfg.n_kv_heads)
         nxt_q, cache_q2 = model.decode_step(params, jnp.argmax(
             logits_q, -1)[:, None].astype(jnp.int32), jnp.int32(8), cache_q)
-        assert cache_q2["k"].dtype == jnp.int8
+        assert cache_q2.k.dtype == jnp.int8
 
     # prefill attends the exact fp values while writing the quantized cache
     np.testing.assert_allclose(np.asarray(logits_q), np.asarray(logits_fp),

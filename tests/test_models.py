@@ -32,6 +32,33 @@ def make_batch(model, b, s, rng):
     return batch
 
 
+@pytest.mark.parametrize("arch", ARCHS)
+def test_chunked_prefill_matches_whole_prefill(arch):
+    """Streaming a prompt through prefill_chunk (the engine's path: first
+    chunk runs the modality frontend / fresh attend, continuations attend
+    the cache prefix) lands on the same last-token logits as one whole
+    prefill — for EVERY family.  Attention families are fp-exact; hybrid's
+    LRU h0-fold and ssm's SSD boundary reassociate in ulps, hence the
+    consistency-test tolerance."""
+    cfg = fp32_cfg(arch)
+    model = build_model(cfg, RunOptions(remat="none"))
+    params = model.init(jax.random.key(0))
+    b, s, max_len, chunk = 2, 16, 32, 8
+    batch = make_batch(model, b, s, jax.random.key(1))
+    logits_full, _ = jax.jit(
+        lambda p, bb: model.prefill(p, bb, max_len))(params, batch)
+
+    cache = model.init_cache(b, max_len)
+    extras = {k: batch[k] for k in model.batch_extras_specs(b, s)} or None
+    step = jax.jit(model.prefill_chunk, static_argnames=("first",))
+    for off in range(0, s, chunk):
+        logits, cache = step(params, batch["tokens"][:, off:off + chunk],
+                             jnp.int32(off), cache, first=(off == 0),
+                             extras=extras)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_full),
+                               rtol=2e-3, atol=2e-3)
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_smoke(arch):

@@ -180,6 +180,40 @@ def test_impl_grammar_variant_knobs():
         policy.parse_impl_spec("attention=pallas:kv_dtype")
 
 
+def test_per_op_interpret_variant(monkeypatch):
+    """``--impl 'op=pallas:interpret=true'`` forces interpret mode for ONE
+    op through the typed-knob grammar: the knob sits between the explicit
+    call arg (stronger) and the policy-global ``interpret`` flag (weaker),
+    and never leaks into the kernel's tile kwargs."""
+    from repro.kernels.registry import KernelSpec
+    seen = []
+
+    def fake_pallas(x, *, interpret, **tiles):
+        seen.append((interpret, "interpret" in tiles))
+        return x
+
+    monkeypatch.setitem(
+        registry._REGISTRY, "scan",
+        KernelSpec(name="scan", pallas=fake_pallas, ref=lambda x: x,
+                   plan=lambda x: {}, supported=lambda: True))
+    _, variants = policy.parse_impl_spec("scan=pallas:interpret=true")
+    assert variants == {"scan": {"interpret": True}}  # typed bool
+
+    x = jnp.ones((4,))
+    with policy.apply(impl={"scan": "pallas"},
+                      variants={"scan": {"interpret": True}}):
+        registry.dispatch("scan", x)                       # knob forces on
+        registry.dispatch("scan", x, interpret=False)      # explicit wins
+    with policy.apply(impl={"scan": "pallas"},
+                      variants={"scan": {"interpret": False}},
+                      interpret=True):
+        registry.dispatch("scan", x)            # knob beats the global flag
+    with policy.apply(impl={"scan": "pallas"}):
+        registry.dispatch("scan", x)            # no knob: native -> compiled
+    assert seen == [(True, False), (False, False), (False, False),
+                    (False, False)]
+
+
 def test_describe_round_trips_variants():
     """describe()'s impl/variant prefix parses back to the same dispatch
     decisions (knob order and bool casing normalize)."""
@@ -328,10 +362,12 @@ def test_shim_matches_policy_train_step(arch):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_hybrid_ring_buffer_pin_keeps_decode_exact():
-    """The ring-buffer decode cache scopes itself onto the jnp path even
-    under a forced-pallas policy: windowed decode with the rotated cache
-    matches the same model decoding over the full linear cache."""
+def test_hybrid_ring_buffer_kernel_route_keeps_decode_exact():
+    """The ring-buffer decode cache no longer pins itself to jnp: under a
+    forced-pallas policy the RingKV layout maps its wrapped rows onto the
+    flash kernel's per-row q_offset/kv_len vectors, and windowed decode
+    with the rotated cache still matches the same model decoding over the
+    full linear cache."""
     cfg = dataclasses.replace(get_smoke_config("recurrentgemma-2b"),
                               dtype="float32")
     ring = build_model(cfg, RunOptions(remat="none", windowed_decode_cache=True))

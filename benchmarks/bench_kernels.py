@@ -28,7 +28,11 @@ machine-readable ``BENCH_kernels.json``.
 
 ``--ops`` filters cases by name or registry op (e.g. ``--ops matmul`` runs
 the matmul + matmul_strassen arms only — the CI smoke arm); a filtered run
-skips the JSON write unless ``--json`` is given explicitly.
+skips the JSON write unless ``--json`` is given explicitly, and when it
+does write it merges its arms into the existing file's ``ops`` instead of
+clobbering the others.  The ``serve_faulted`` arm measures the engine's
+fault-recovery overhead (clean vs seeded-fault-plan run, tokens asserted
+identical).
 """
 from __future__ import annotations
 
@@ -326,6 +330,75 @@ def _bench_serve_continuous_hybrid() -> dict:
     return entry
 
 
+def _bench_serve_faulted() -> dict:
+    """Recovery-overhead arm: the SAME workload through the engine clean,
+    then under a seeded fault plan firing all three fault kinds — a decode
+    raise (bounded retry), a prefill straggler delay, and a poisoned slot
+    (non-finite row -> bisect, evict, resume from its last snapshot).  The
+    fresh injector is installed AFTER warmup so the warmup run cannot burn
+    the plan's entries.  Tokens are asserted request-for-request identical
+    and ``snapshot_restores >= 1`` — the measured claim is that recovery
+    costs bounded wall time, never correctness."""
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.launch.engine import Engine
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.serve import Request
+    from repro.models.base import RunOptions
+    from repro.runtime.fault_tolerance import FaultInjector
+
+    plan = "decode@1=raise,prefill@1=delay:0.05,slot@1=nan_logits:3"
+    cfg = get_smoke_config("qwen3-1.7b")
+    mesh = make_debug_mesh(tp=min(2, len(jax.devices())))
+    rng = np.random.default_rng(0)
+    spec = [(rng.integers(3, cfg.vocab_size, 12).astype(np.int32), mn)
+            for mn in (8, 6, 8, 4, 6, 8)]
+
+    def requests():
+        return [Request(i, p, max_new=mn) for i, (p, mn) in enumerate(spec)]
+
+    engine = Engine(cfg, mesh, max_batch=3, max_len=64, chunk=8,
+                    snapshot_every=2, injector=FaultInjector(""),
+                    opts=RunOptions())
+    # warmup = the full workload once, so compiles AND the snapshot path's
+    # one-time eager lowering land outside both timed runs
+    engine.run(requests())
+
+    clean_reqs = requests()
+    clean = engine.run(clean_reqs)
+
+    engine.injector = FaultInjector(plan)
+    faulted_reqs = requests()
+    faulted = engine.run(faulted_reqs)
+
+    tel = faulted["telemetry"]
+    assert [r.out for r in faulted_reqs] == [r.out for r in clean_reqs], \
+        "faulted tokens diverge from the clean run"
+    assert tel["retries"] >= 1, "the decode raise never retried"
+    assert tel["slots_poisoned"] == 1, "the poisoned slot was not bisected"
+    assert tel["snapshot_restores"] >= 1, "recovery skipped the snapshot"
+
+    entry = {
+        "op": "serve", "shape": "faulted_3slots_6reqs", "plan": plan,
+        "clean_tok_per_s": round(clean["tok_per_s"], 1),
+        "faulted_tok_per_s": round(faulted["tok_per_s"], 1),
+        "recovery_overhead": round(
+            faulted["wall_s"] / max(clean["wall_s"], 1e-9), 2),
+        "faulted_decode_steps": faulted["decode_steps"],
+        "clean_decode_steps": clean["decode_steps"],
+        "telemetry": tel,
+    }
+    print(f"kernel_serve_clean_{entry['shape']},"
+          f"{clean['wall_s'] / max(clean['tokens'], 1) * 1e6:.0f},"
+          f"{entry['clean_tok_per_s']}tok/s")
+    print(f"kernel_serve_faulted_{entry['shape']},"
+          f"{faulted['wall_s'] / max(faulted['tokens'], 1) * 1e6:.0f},"
+          f"{entry['faulted_tok_per_s']}tok/s "
+          f"({entry['recovery_overhead']}x clean, tokens identical)")
+    return entry
+
+
 def main(json_path: str | None = None, ops: list[str] | None = None) -> dict:
     results: dict[str, dict] = {}
     cases = _cases()
@@ -379,6 +452,8 @@ def main(json_path: str | None = None, ops: list[str] | None = None) -> dict:
         results["serve_continuous"] = _bench_serve_continuous()
     if ops is None or "serve_continuous_hybrid" in ops:
         results["serve_continuous_hybrid"] = _bench_serve_continuous_hybrid()
+    if ops is None or "serve_faulted" in ops:
+        results["serve_faulted"] = _bench_serve_faulted()
 
     from repro.kernels import policy
     dp = planner.device_params()
@@ -393,7 +468,13 @@ def main(json_path: str | None = None, ops: list[str] | None = None) -> dict:
         "ops": results,
     }
     if json_path:
-        Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+        out = Path(json_path)
+        if ops and out.exists():
+            # a filtered run UPDATES its arms in the existing file instead
+            # of clobbering the others (device/policy provenance refreshes)
+            prior = json.loads(out.read_text()).get("ops", {})
+            payload["ops"] = {**prior, **results}
+        out.write_text(json.dumps(payload, indent=2) + "\n")
         print(f"# wrote {json_path}")
     return payload
 

@@ -50,6 +50,47 @@ serving contract (``init_cache`` -> ``repro.models.cache`` layouts,
 audio; a family missing a method fails construction with a structured
 ``UnsupportedFamilyError``.
 
+**Failure model** (mirrors ``repro.runtime.fault_tolerance``'s (a)/(b)/(c)
+taxonomy, mapped onto launches):
+
+(a) *Hard launch failure.*  A decode or prefill launch that exhausts its
+    ``FaultPolicy`` bounded retries raises ``LaunchFailedError`` out of
+    :meth:`Engine.run` for a job-level restart —
+    :meth:`Engine.restart` rebuilds a replica on a (possibly shrunken)
+    mesh from the latest params checkpoint via
+    ``repro.runtime.elastic.serving_restore`` (pure PWS re-plan, no
+    per-tensor migration; caches rebuild empty and requests replay).
+
+(b) *Transient launch fault / poisoned row.*  Every launch runs under
+    bounded retry with exponential backoff and seeded jitter (the one
+    sanctioned nondeterminism — it perturbs wall time, never tokens;
+    retries are sound because faults fire BEFORE the launch commits its
+    donated buffers).  A row whose logits go non-finite is bisected by the
+    per-row validity vector the decode step returns: only the poisoned
+    slot is evicted and its request re-queued through ``match_round`` —
+    token emission for that step is suppressed, so greedy replay (from
+    the last row snapshot when one exists, else the full effective
+    prompt) keeps the request's tokens identical to a clean run.
+
+(c) *Stragglers + graceful degradation.*  Each launch's wall time feeds a
+    ``StragglerMonitor`` watchdog (z-score flagging, flagged samples
+    excluded from the window); flagged launches and failed attempts both
+    count as fault events.  When ``degrade_after`` events land within
+    ``degrade_window`` engine iterations, the active-slot limit shrinks by
+    one (existing occupants drain naturally; admission just stops filling
+    the top slot), and after ``heal_after`` healthy iterations it probes
+    back up one slot at a time.  Degradation changes scheduling only —
+    greedy tokens stay identical.
+
+Row snapshots (``models.cache.snapshot_row``/``restore_row``) are taken on
+a ``snapshot_every`` generated-token cadence, host-staged per request:
+recovery and ``cache_budget`` pressure eviction both resume from the last
+snapshot plus a short greedy replay instead of whole-residency recompute.
+A deterministic ``FaultInjector`` plan (``--inject`` / ``REPRO_FAULTS``,
+grammar ``decode@12=raise,prefill@3=delay:0.2,slot@2=nan_logits``) drives
+the same faults through tests, the CI smoke arm, and the bench recovery
+arm — recovery is asserted invisible to numerics.
+
 Numerics contract: with greedy decoding the engine's per-request tokens are
 IDENTICAL to running each request alone through the lockstep path (same
 jitted model functions, write-before-attend keeps parked rows harmless) —
@@ -76,6 +117,12 @@ from repro.core.sharding_hints import axis_rules
 from repro.launch.serve import Request, Server
 from repro.models import cache as dcache
 from repro.models.base import Model, RunOptions, UnsupportedFamilyError
+from repro.runtime.fault_tolerance import (
+    FaultInjector,
+    FaultPolicy,
+    LaunchFailedError,
+    StragglerMonitor,
+)
 
 log = logging.getLogger("repro.engine")
 
@@ -101,6 +148,15 @@ class SlotScheduler:
             "evictions": 0,      # slot releases (stop / capacity)
             "pressure_evictions": 0,  # budget evictions (request re-queued)
             "max_round_matches": 0,
+            # fault-tolerance telemetry (engine-incremented)
+            "retries": 0,             # launch retry attempts
+            "faults_injected": 0,     # mirrored from the FaultInjector
+            "slots_poisoned": 0,      # non-finite rows bisected + evicted
+            "snapshots_taken": 0,     # host-staged row snapshots
+            "snapshot_restores": 0,   # re-admissions resumed from a snapshot
+            "stragglers": 0,          # watchdog-flagged slow launches
+            "degradations": 0,        # active-slot-limit shrinks
+            "degraded_iters": 0,      # iterations run below full slot count
         }
 
     def assign(self, idle_slots, queue, priority):
@@ -166,6 +222,11 @@ class Engine(Server):
     def __init__(self, cfg, mesh, *, max_batch: int = 4, max_len: int = 256,
                  chunk: int = 16, eos_id: Optional[int] = None,
                  cache_budget: Optional[int] = None,
+                 fault_policy: Optional[FaultPolicy] = None,
+                 injector: Optional[FaultInjector] = None,
+                 snapshot_every: int = 16,
+                 degrade_after: int = 3, degrade_window: int = 8,
+                 heal_after: int = 16,
                  opts: RunOptions = RunOptions()):
         super().__init__(cfg, mesh, max_batch=max_batch, max_len=max_len,
                          opts=opts)
@@ -176,6 +237,19 @@ class Engine(Server):
         self.chunk = int(chunk)
         self.eos_id = eos_id
         self.cache_budget = cache_budget
+        self.fault_policy = fault_policy or FaultPolicy()
+        self.injector = FaultInjector.from_env() if injector is None \
+            else injector
+        self.snapshot_every = int(snapshot_every)
+        self.degrade_after = int(degrade_after)
+        self.degrade_window = int(degrade_window)
+        self.heal_after = int(heal_after)
+        # per-launch watchdog: wall-time z-scores over the dispatch window
+        # (injected delays sleep inside it); flagged launches count toward
+        # the degradation window.  On-device stalls past dispatch need a
+        # block_until_ready probe — out of scope on this backend.
+        self.watchdog = StragglerMonitor(window=32, k_sigma=4.0,
+                                         min_samples=5)
         self.scheduler = SlotScheduler(max_batch)
         # host-side staging for modality-frontend inputs (VLM/audio): one
         # full-batch buffer per spec, rows written at admission and shipped
@@ -189,14 +263,22 @@ class Engine(Server):
         from repro.kernels import policy as kernel_policy
         prov = kernel_autotune.provenance()
         log.info("engine policy %s | autotune table %s (%d tuned plan(s), "
-                 "%s)", kernel_policy.current().describe(), prov["table"],
+                 "%s) | faults %s | retry max=%d snapshot_every=%d",
+                 kernel_policy.current().describe(), prov["table"],
                  prov["tuned_plans"],
-                 "present" if prov["table_exists"] else "absent")
+                 "present" if prov["table_exists"] else "absent",
+                 self.injector.describe(), self.fault_policy.max_retries,
+                 self.snapshot_every)
 
-        def decode_rows(params, tokens, pos, cache):
+        def decode_rows(params, tokens, pos, cache, poison):
             logits, cache = self.model.decode_step(params, tokens, pos, cache)
+            # injected poison lands here (a traced mask — no recompile);
+            # the per-row finiteness vector is the bisection signal the
+            # host uses to evict exactly the corrupt slot
+            logits = jnp.where(poison[:, None], jnp.float32(jnp.nan), logits)
+            ok = jnp.all(jnp.isfinite(logits), axis=-1)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return nxt, cache
+            return nxt, ok, cache
 
         def chunk_step(params, tokens, offset, lens, cache, extras, *, first):
             logits, cache = self.model.prefill_chunk(
@@ -211,6 +293,28 @@ class Engine(Server):
             functools.partial(chunk_step, first=True), donate_argnums=(4,))
         self._chunk_cont = jax.jit(
             functools.partial(chunk_step, first=False), donate_argnums=(4,))
+
+    @classmethod
+    def restart(cls, cfg, mesh, ckpt_dir, **kw):
+        """Failure model (a): rebuild a serving replica on ``mesh`` — the
+        same mesh, or a shrunken one after losing hosts — with params from
+        the latest checkpoint via ``elastic.serving_restore``.  The PWS
+        planner is deterministic in the mesh, so this is a pure re-plan +
+        device_put: no per-tensor migration, and the restored replica's
+        logits are identical to the original's.  Caches rebuild empty;
+        in-flight requests re-enter through admission and replay."""
+        from repro.checkpoint import CheckpointManager
+        from repro.runtime import elastic
+
+        eng = cls(cfg, mesh, **kw)
+        aparams = jax.eval_shape(lambda: eng.model.init(jax.random.key(0)))
+        with mesh, axis_rules(eng.rules, mesh):
+            step, params, _ = elastic.serving_restore(
+                CheckpointManager(ckpt_dir), aparams, mesh)
+        eng.params = params
+        log.info("engine restarted from step-%d checkpoint on mesh %s",
+                 step, dict(mesh.shape))
+        return eng
 
     # -- scheduling ----------------------------------------------------------
     @staticmethod
@@ -235,6 +339,95 @@ class Engine(Server):
         self.slots[i] = _Slot()
         self.scheduler.counters["evictions"] += 1
 
+    # -- fault handling ------------------------------------------------------
+    def _launch(self, kind: str, fn, *args):
+        """Run one jitted launch under the failure model: the injector may
+        raise or delay it, failures retry up to ``FaultPolicy.max_retries``
+        with seeded exponential backoff, and the watchdog z-scores its wall
+        time.  Retrying the same arguments is sound because faults fire
+        before the launch commits its donated buffers.  Exhausted retries
+        escalate as :class:`LaunchFailedError` (failure model (a))."""
+        ordinal = self._launch_seq[kind]
+        self._launch_seq[kind] = ordinal + 1
+        counters = self.scheduler.counters
+        last: Optional[BaseException] = None
+        for attempt in range(self.fault_policy.max_retries + 1):
+            if attempt:
+                counters["retries"] += 1
+                time.sleep(self.fault_policy.backoff(attempt - 1,
+                                                     self._fault_rng))
+            t0 = time.time()
+            try:
+                self.injector.before_launch(kind, ordinal)
+                out = fn(*args)
+            except Exception as e:  # noqa: BLE001 — any launch fault retries
+                last = e
+                self._note_fault()
+                log.warning("%s launch %d attempt %d failed: %r",
+                            kind, ordinal, attempt, e)
+                continue
+            if self.watchdog.observe(time.time() - t0):
+                counters["stragglers"] += 1
+                self._note_fault()
+                log.warning("straggler %s launch %d", kind, ordinal)
+            return out
+        raise LaunchFailedError(kind, ordinal,
+                                self.fault_policy.max_retries + 1) from last
+
+    def _note_fault(self):
+        """One fault event (failed attempt, straggler, poisoned row) lands
+        in the degradation window."""
+        self._recent_faults.append(self._iter)
+        self._last_fault_iter = self._iter
+
+    def _update_degradation(self):
+        """Failure model (c): shrink the active-slot limit after
+        ``degrade_after`` fault events inside ``degrade_window`` iterations
+        (occupied slots above the limit drain naturally — only admission
+        shrinks), probe back up one slot per ``heal_after`` healthy
+        iterations.  Scheduling-only: greedy tokens are unaffected."""
+        counters = self.scheduler.counters
+        cutoff = self._iter - self.degrade_window
+        self._recent_faults = [t for t in self._recent_faults if t >= cutoff]
+        if (len(self._recent_faults) >= self.degrade_after
+                and self._active_limit > 1):
+            self._active_limit -= 1
+            self._recent_faults.clear()  # fresh evidence before the next cut
+            counters["degradations"] += 1
+            log.warning("degraded to %d/%d active slots",
+                        self._active_limit, self.max_batch)
+        elif (self._active_limit < self.max_batch
+                and self._iter - self._last_fault_iter >= self.heal_after):
+            self._active_limit += 1
+            self._last_fault_iter = self._iter  # one probe per heal window
+        if self._active_limit < self.max_batch:
+            counters["degraded_iters"] += 1
+        self._iter += 1
+
+    def _poisoned(self, i: int, queue: list):
+        """Failure model (b), after bisection: slot ``i``'s row went
+        non-finite.  Only this slot is evicted; its request re-queues
+        through ``match_round`` and resumes from its last snapshot (or a
+        full effective-prompt replay) — its emitted tokens stay exactly the
+        clean run's."""
+        req = self.slots[i].req
+        self.slots[i] = _Slot()
+        queue.append(req)
+        self.scheduler.counters["slots_poisoned"] += 1
+        self._note_fault()
+        log.warning("poisoned slot %d: evicted uid=%d for replay", i,
+                    req.uid)
+
+    def _take_snapshot(self, i: int):
+        """Host-stage row ``i`` as its request's resume point (cadence:
+        every ``snapshot_every`` generated tokens)."""
+        s = self.slots[i]
+        self._snaps[s.req.uid] = {
+            "row": dcache.snapshot_row(self.cache, i),
+            "pos": s.pos, "n_out": len(s.req.out), "last": s.last_token,
+        }
+        self.scheduler.counters["snapshots_taken"] += 1
+
     def _emit(self, i: int, tok: int) -> bool:
         """Record one generated token for slot ``i``; returns True (and
         evicts) when the request stops: max_new reached, EOS, or the cache
@@ -248,18 +441,37 @@ class Engine(Server):
                 or slot.pos >= self.max_len)
         if stop:
             self._completed.append(r)
+            self._snaps.pop(r.uid, None)  # resume point no longer needed
             self._evict(i)
         return stop
 
     # -- engine loop ---------------------------------------------------------
     def _admit(self, queue: list):
-        idle = [i for i, s in enumerate(self.slots) if s.state == "empty"]
+        # degradation shrinks the admissible slot range; occupants above the
+        # limit keep running until they finish on their own
+        idle = [i for i, s in enumerate(self.slots[:self._active_limit])
+                if s.state == "empty"]
         if not idle or not queue:
             return
         matched = self.scheduler.assign(idle, queue, self._work_remaining)
         # pop in descending queue order so earlier indices stay valid
         for slot_id, qidx in sorted(matched, key=lambda m: -m[1]):
             req = queue.pop(qidx)
+            snap = self._snaps.get(req.uid)
+            if snap is not None:
+                # resume from the last row snapshot: restore the row slices
+                # wholesale (cursors, slabs, scales, recurrent state +
+                # validity), truncate the output back to the snapshot point,
+                # and replay the short greedy tail — no prefill at all
+                self.cache = dcache.restore_row(self.cache, slot_id,
+                                                snap["row"])
+                del req.out[snap["n_out"]:]
+                self.slots[slot_id] = _Slot(req=req, state="decode",
+                                            filled=snap["pos"],
+                                            pos=snap["pos"],
+                                            last_token=snap["last"])
+                self.scheduler.counters["snapshot_restores"] += 1
+                continue
             self.slots[slot_id] = _Slot(req=req, state="prefill", filled=0,
                                         prompt=self._effective_prompt(req))
             # the row's per-row lengths/validity reset here; slabs are NOT
@@ -301,9 +513,9 @@ class Engine(Server):
             if fn is self._chunk_first and self._extras_host is not None:
                 extras = {k: jnp.asarray(v)
                           for k, v in self._extras_host.items()}
-            nxt, self.cache = fn(self.params, jnp.asarray(toks),
-                                 jnp.asarray(offset), jnp.asarray(lens),
-                                 self.cache, extras)
+            nxt, self.cache = self._launch(
+                "prefill", fn, self.params, jnp.asarray(toks),
+                jnp.asarray(offset), jnp.asarray(lens), self.cache, extras)
             nxt = np.asarray(nxt)
             self._n_chunks += 1
             self._n_chunk_rows += len(group)
@@ -318,39 +530,54 @@ class Engine(Server):
                     slot.last_token = tok
                     self._emit(i, tok)
 
-    def _decode_step(self):
+    def _decode_step(self, queue: list):
         """One batched per-row decode step over every decoding slot.  Rows
         not decoding still ride along (fixed shapes — no recompile): their
         garbage k/v writes park at the next position their own prefill (or
         admission) will overwrite before anything attends it — the
-        write-before-attend discipline that makes lane coexistence safe."""
+        write-before-attend discipline that makes lane coexistence safe.
+        The step returns a per-row validity vector; a decoding row that
+        comes back non-finite is bisected and evicted (:meth:`_poisoned`)
+        with its token suppressed, and surviving rows snapshot on the
+        ``snapshot_every`` cadence."""
         toks = np.zeros((self.max_batch, 1), np.int32)
         pos = np.zeros((self.max_batch,), np.int32)
+        decoding = []
         for i, s in enumerate(self.slots):
             if s.state == "decode":
                 toks[i, 0] = s.last_token
                 pos[i] = s.pos
+                decoding.append(i)
             else:  # park: overwritten by the slot's next prefill chunk
                 pos[i] = s.context
-        nxt, self.cache = self._decode_rows(
-            self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache)
-        nxt = np.asarray(nxt)
+        poison = np.zeros((self.max_batch,), bool)
+        poison[self.injector.poison_rows(decoding)] = True
+        nxt, ok, self.cache = self._launch(
+            "decode", self._decode_rows, self.params, jnp.asarray(toks),
+            jnp.asarray(pos), self.cache, jnp.asarray(poison))
+        nxt, ok = np.asarray(nxt), np.asarray(ok)
         self._n_decode_steps += 1
-        for i, s in enumerate(self.slots):
-            if s.state != "decode":
+        for i in decoding:
+            if not ok[i]:
+                self._poisoned(i, queue)
                 continue
+            s = self.slots[i]
             s.pos += 1
             tok = int(nxt[i])
             s.last_token = tok
-            self._emit(i, tok)
+            if (not self._emit(i, tok) and self.snapshot_every
+                    and len(s.req.out) % self.snapshot_every == 0):
+                self._take_snapshot(i)
 
     def _apply_pressure(self, queue: list):
         """Evict while the host-mirrored live-context total exceeds
         ``cache_budget`` and more than one slot is active: the
         largest-context slot releases, its request re-queued with generated
         tokens folded into the prompt (replayed exactly under greedy
-        decode).  A lone active slot never evicts — progress is guaranteed
-        whatever the budget."""
+        decode) — or, when the request holds a row snapshot, resumed from
+        it at re-admission (host-staged, so it costs no budget).  A lone
+        active slot never evicts — progress is guaranteed whatever the
+        budget."""
         if self.cache_budget is None:
             return
         while True:
@@ -376,6 +603,18 @@ class Engine(Server):
         self.cache = self.model.init_cache(self.max_batch, self.max_len)
         self._completed: list[Request] = []
         self._n_chunks = self._n_decode_steps = self._n_chunk_rows = 0
+        # fault state is per-run: launch ordinals restart (so a plan's
+        # decode@N names the N-th launch of THIS run), the backoff rng
+        # re-seeds (reproducible delay sequence), snapshots/degradation
+        # start clean
+        self._launch_seq = {"decode": 0, "prefill": 0}
+        injected_before = self.injector.counters["faults_injected"]
+        self._fault_rng = self.fault_policy.make_rng()
+        self._snaps: dict[int, dict] = {}
+        self._recent_faults: list[int] = []
+        self._iter = 0
+        self._last_fault_iter = -(10 ** 9)
+        self._active_limit = self.max_batch
 
         t0 = time.time()
         with self.mesh, axis_rules(self.rules, self.mesh):
@@ -383,8 +622,11 @@ class Engine(Server):
                 self._admit(queue)
                 self._advance_prefill()
                 if any(s.state == "decode" for s in self.slots):
-                    self._decode_step()
+                    self._decode_step(queue)
                 self._apply_pressure(queue)
+                self._update_degradation()
+        self.scheduler.counters["faults_injected"] = (
+            self.injector.counters["faults_injected"] - injected_before)
         dt = time.time() - t0
         n_tokens = sum(len(r.out) for r in requests)
         return {
@@ -447,6 +689,14 @@ def main():
     ap.add_argument("--check-lockstep", action="store_true",
                     help="re-run each request alone through the lockstep "
                          "path and assert row-for-row token parity")
+    ap.add_argument("--inject", default="",
+                    help="deterministic fault plan, e.g. 'decode@12=raise,"
+                         "prefill@3=delay:0.2,slot@2=nan_logits' (default: "
+                         "the REPRO_FAULTS env plan)")
+    ap.add_argument("--snapshot-every", type=int, default=16,
+                    help="host-stage a row snapshot every N generated "
+                         "tokens (0 = off; recovery then replays the full "
+                         "effective prompt)")
     ap.add_argument("--impl", default="",
                     help="execution-policy impl map (see serve.py docstring)")
     args = ap.parse_args()
@@ -463,7 +713,10 @@ def main():
     mesh = make_debug_mesh(tp=min(2, len(jax.devices())))
     engine = Engine(cfg, mesh, max_batch=args.slots, max_len=128,
                     chunk=args.chunk, opts=RunOptions(),
-                    cache_budget=args.cache_budget or None)
+                    cache_budget=args.cache_budget or None,
+                    injector=(FaultInjector(args.inject) if args.inject
+                              else None),
+                    snapshot_every=args.snapshot_every)
     rng = np.random.default_rng(0)
 
     def plen():

@@ -32,6 +32,12 @@ dispatches as zero-offset self-attention and decode as a cached-attention
 call where the step position flows into the kernel as a traced ``q_offset``
 (and, causally, the KV valid-length) — per-step positions never retrace
 either jit.  ``REPRO_IMPL`` (same grammar) sets the policy without a flag.
+
+The lockstep server has NO failure handling by design — it is the simple
+baseline and the parity oracle.  Fault injection, bounded launch retry,
+row snapshots, and graceful degradation live in ``repro.launch.engine``
+(see its "Failure model" section); ``REPRO_FAULTS`` / ``--inject`` plans
+target the engine only.
 """
 from __future__ import annotations
 
@@ -58,6 +64,10 @@ class Request:
     uid: int
     prompt: np.ndarray  # (plen,) int32
     max_new: int = 16
+    # generated tokens; under the engine's fault/pressure recovery, `out`
+    # may be truncated back to a row-snapshot point and regenerated — greedy
+    # decode makes the replay token-identical, so the final contents always
+    # match a clean run
     out: list = field(default_factory=list)
     # modality-frontend inputs keyed by the model's batch_extras_specs()
     # (e.g. "image_embeds" / "audio_frames"), one row each, no batch axis

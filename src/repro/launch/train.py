@@ -111,8 +111,7 @@ def train(cfg, *, mesh, steps: int, data_cfg: DataConfig,
             if runner is not None:
                 def do_step():
                     return jitted(params, opt_state, batch)
-                params, opt_state, metrics = runner.run_step(
-                    step, {"params": params, "opt_state": opt_state}, do_step)
+                params, opt_state, metrics = runner.run_step(step, do_step)
             else:
                 params, opt_state, metrics = jitted(params, opt_state, batch)
             loss = float(metrics["loss"])

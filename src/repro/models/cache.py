@@ -8,7 +8,8 @@ lanes (``repro.kernels.flash_attention``).  A model family composes its
 cache from these layouts (a layout instance, or a dict of them); the
 serving engine stays layout-generic by talking only to the module-level
 composite helpers (:func:`slot`, :func:`set_slot`, :func:`reset_row`,
-:func:`set_row_valid`, :func:`lengths`).
+:func:`set_row_valid`, :func:`lengths`, and the fault-recovery pair
+:func:`snapshot_row`/:func:`restore_row`).
 
 Layouts
 -------
@@ -339,6 +340,25 @@ def set_row_valid(cache, i: int, flag: bool):
         cache,
         lambda lo: lo.set_row_valid(i, flag) if isinstance(lo, StateCarry)
         else lo)
+
+
+def snapshot_row(cache, i: int):
+    """Host-staged copy of slot ``i`` across every layout: the b=1 pytree
+    slice of the whole composite with numpy leaves, so the snapshot costs
+    no device memory and survives the engine's donated-buffer launches.
+    Taken on a token-count cadence by the serving engine, it is the resume
+    point for BOTH fault recovery (a poisoned row) and pressure eviction —
+    restore plus a short greedy token replay instead of whole-residency
+    recompute.  Restore with :func:`restore_row`, into the same or a
+    DIFFERENT slot (row slices carry no slot identity)."""
+    return jax.device_get(slot(cache, i))
+
+
+def restore_row(cache, i: int, snap):
+    """Write a :func:`snapshot_row` back into slot ``i``: slabs, positional
+    cursors, int8 scales, frozen cross-KV, recurrent state and its validity
+    all land, so the row resumes exactly at its snapshot point."""
+    return set_slot(cache, i, snap)
 
 
 def lengths(cache):

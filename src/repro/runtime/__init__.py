@@ -1,4 +1,29 @@
-from repro.runtime.fault_tolerance import FaultTolerantRunner, StragglerMonitor
-from repro.runtime.elastic import replan_for_mesh
+from repro.runtime.elastic import (
+    elastic_restore,
+    replan_for_mesh,
+    replan_params_for_mesh,
+    serving_restore,
+)
+from repro.runtime.fault_tolerance import (
+    FaultInjector,
+    FaultPolicy,
+    FaultTolerantRunner,
+    InjectedFault,
+    LaunchFailedError,
+    StragglerMonitor,
+    parse_fault_plan,
+)
 
-__all__ = ["FaultTolerantRunner", "StragglerMonitor", "replan_for_mesh"]
+__all__ = [
+    "FaultInjector",
+    "FaultPolicy",
+    "FaultTolerantRunner",
+    "InjectedFault",
+    "LaunchFailedError",
+    "StragglerMonitor",
+    "parse_fault_plan",
+    "elastic_restore",
+    "replan_for_mesh",
+    "replan_params_for_mesh",
+    "serving_restore",
+]

@@ -5,6 +5,13 @@ the steal schedule is determined by p) — so scaling from 512 to 256 chips
 (or onto a degraded 2x15x16 slice) is: rebuild the mesh, re-run
 ``plan_params``/``plan_cache``, and device_put the checkpointed logical
 arrays under the new shardings.  No per-tensor migration logic.
+
+Two restart paths share the machinery: :func:`elastic_restore` rebuilds a
+TRAIN state (params + optimizer) and :func:`serving_restore` a SERVING
+replica (params only — decode caches are rebuilt empty and refilled by
+request replay, so a replica restarted on a shrunken mesh serves logits
+identical to the original; ``repro.launch.engine.Engine.restart`` is the
+engine-level wrapper).
 """
 from __future__ import annotations
 
@@ -34,3 +41,21 @@ def elastic_restore(ckpt_manager, abstract_state: Any, new_mesh):
     shardings = replan_for_mesh(abstract_state, new_mesh)
     step, state = ckpt_manager.restore_latest(abstract_state, shardings)
     return step, state, shardings
+
+
+def replan_params_for_mesh(abstract_params: Any, new_mesh):
+    """Shardings for a params-only (serving) state on a new mesh."""
+    return planner.named(planner.plan_params(abstract_params, new_mesh),
+                         new_mesh)
+
+
+def serving_restore(ckpt_manager, abstract_params: Any, new_mesh):
+    """Restore the latest params checkpoint resharded onto ``new_mesh`` for
+    a serving restart: no optimizer state, no cache (decode caches rebuild
+    empty; in-flight requests replay through admission).  Accepts
+    checkpoints saved as ``{"params": ...}`` (the train driver's layout).
+    Returns ``(step, params, shardings)``."""
+    shardings = replan_params_for_mesh(abstract_params, new_mesh)
+    step, state = ckpt_manager.restore_latest({"params": abstract_params},
+                                              {"params": shardings})
+    return step, state["params"], shardings

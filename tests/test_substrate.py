@@ -160,7 +160,7 @@ def test_runner_retries_transient_failure(tmp_path):
             raise RuntimeError("transient")
         return "ok"
 
-    assert runner.run_step(0, None, flaky) == "ok"
+    assert runner.run_step(0, flaky) == "ok"
     assert runner.retries == 2
 
 
@@ -172,7 +172,7 @@ def test_runner_gives_up_and_raises(tmp_path):
         raise ValueError("hard")
 
     with pytest.raises(RuntimeError):
-        runner.run_step(0, None, always_fails)
+        runner.run_step(0, always_fails)
 
 
 def test_straggler_monitor_flags_outliers():
@@ -180,6 +180,21 @@ def test_straggler_monitor_flags_outliers():
     for _ in range(20):
         assert not mon.observe(1.0 + np.random.default_rng(0).random() * 0.01)
     assert mon.observe(10.0)
+
+
+def test_straggler_monitor_excludes_flagged_from_window():
+    """Regression: a flagged sample must NOT enter the rolling window — one
+    genuine straggler would otherwise inflate the std and mask the next
+    (10.0 in a ~1.0 window pushes mean + 3*sigma past any moderate
+    outlier)."""
+    mon = StragglerMonitor(min_samples=10, k_sigma=3.0)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        mon.observe(1.0 + rng.random() * 0.01)
+    assert mon.observe(10.0)
+    assert 10.0 not in mon.times          # excluded from the stats window
+    assert mon.observe(2.0)               # the next straggler still flags
+    assert mon.flagged == 2
 
 
 # -- elastic -----------------------------------------------------------------------

@@ -26,12 +26,15 @@ def match_round(idle, heads):
     by rank matched positionally to the victims holding the round's (max)
     priority, victims by index — or ``(None, [])`` when nothing is stealable.
 
-    This is the deterministic core both the simulated-machine scheduler
-    (:class:`PWS`) and the serving engine's slot scheduler
-    (``repro.launch.engine.SlotScheduler``) run their rounds through:
+    This is the deterministic core three consumers run their rounds
+    through: the simulated-machine scheduler (:class:`PWS`), the serving
+    engine's slot scheduler (``repro.launch.engine.SlotScheduler``) —
     requests are tasks, idle decode slots are thieves, priority = work
-    remaining.  The caller owns the round-boundary rules (advertised-bound
-    deferral here; the bounded-steals cap in the engine)."""
+    remaining — and the fleet router's ``pws`` arm
+    (``repro.launch.router.Router``), where whole replicas are the
+    processors and queued requests the stealable heads.  The caller owns
+    the round-boundary rules (advertised-bound deferral here; the
+    bounded-steals cap in the engine and the router)."""
     live = [(v, pr) for v, pr in heads if pr is not None]
     if not live or not idle:
         return None, []

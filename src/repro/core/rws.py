@@ -12,6 +12,25 @@ import random
 from typing import Optional
 
 
+def two_choice(rng: random.Random, ids, load) -> int:
+    """Seeded randomized two-choice placement (the d=2 power-of-two-choices
+    refinement of the companion paper's uniform victim pick): sample two
+    DISTINCT ids uniformly, return the lighter-loaded one, ties to the
+    lower id.  The fleet router's randomized arm runs every placement
+    through this — the randomness perturbs *where* a request lands, never
+    its tokens, mirroring the simulator's wall-time-only nondeterminism.
+    With a single candidate there is nothing to choose between."""
+    ids = list(ids)
+    if len(ids) == 1:
+        return ids[0]
+    i = rng.randrange(len(ids))
+    j = rng.randrange(len(ids) - 1)
+    if j >= i:
+        j += 1
+    a, b = ids[i], ids[j]
+    return a if (load[a], a) <= (load[b], b) else b
+
+
 class RWS:
     def __init__(self, seed: int = 0, steal_cost: Optional[float] = None):
         self.seed = seed

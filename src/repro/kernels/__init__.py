@@ -140,6 +140,14 @@ never adds a knob to a kernel, it only picks values for the existing ones.
 Kernel modules (``bp_scan``, ``hbp_matmul``, ``strassen_matmul``,
 ``bi_transpose``, ``flash_attention``, ``bi_fft``) stay importable directly
 for tests and experiments; ``ref`` holds the pure-jnp oracles.
+
+Layers above: ``repro.models`` calls kernels only through ``dispatch``;
+``repro.launch`` stacks the serving tiers on top of the models — lockstep
+``serve.Server``, continuous-batching ``engine.Engine``, and the
+multi-replica ``router.Router`` fleet, whose replicas each carry this
+layer's policy ``describe()`` and autotune ``provenance()`` as their
+per-replica provenance rows (replicas on different device kinds replay
+different tuned tables; the router surfaces which).
 """
 from repro.kernels import autotune, morton, planner, policy, ref, registry
 from repro.kernels.bi_fft import bi_fft

@@ -82,6 +82,16 @@ taxonomy, mapped onto launches):
     back up one slot at a time.  Degradation changes scheduling only —
     greedy tokens stay identical.
 
+(d) *Replica loss.*  Handled one level up.  A ``LaunchFailedError`` that
+    escalates out of :meth:`Engine.run` / :meth:`Engine.step` marks the
+    whole replica dead at the fleet tier: ``repro.launch.router`` salvages
+    the replica's queue and in-flight requests (each with its last
+    host-staged snapshot — host memory survives device loss), re-queues
+    them router-wide, and spins up a replacement through
+    checkpoint-streamed :meth:`Engine.restart` on a re-planned (possibly
+    shrunken) mesh.  This engine owns tiers (a)–(c) only; it never
+    catches its own escalation.
+
 Row snapshots (``models.cache.snapshot_row``/``restore_row``) are taken on
 a ``snapshot_every`` generated-token cadence, host-staged per request:
 recovery and ``cache_budget`` pressure eviction both resume from the last
@@ -122,6 +132,7 @@ from repro.runtime.fault_tolerance import (
     FaultPolicy,
     LaunchFailedError,
     StragglerMonitor,
+    export_fault_counters,
 )
 
 log = logging.getLogger("repro.engine")
@@ -147,6 +158,7 @@ class SlotScheduler:
             "rounds": 0,         # matching rounds run
             "evictions": 0,      # slot releases (stop / capacity)
             "pressure_evictions": 0,  # budget evictions (request re-queued)
+            "drains": 0,         # router-level slot releases (migration/leave)
             "max_round_matches": 0,
             # fault-tolerance telemetry (engine-incremented)
             "retries": 0,             # launch retry attempts
@@ -201,6 +213,9 @@ class _Slot:
     filled: int = 0           # cache positions written (prefill progress)
     pos: int = 0              # next decode position (== tokens in context)
     last_token: int = 0
+    # engine iteration of the slot's last progress (admission, chunk, or
+    # decoded token) — the recency stamp the "coldest" eviction policy keys on
+    last_step: int = -1
     # the residency's effective prompt: the request's prompt plus any
     # tokens generated before a pressure eviction (replayed on re-admit)
     prompt: Optional[np.ndarray] = None
@@ -222,6 +237,7 @@ class Engine(Server):
     def __init__(self, cfg, mesh, *, max_batch: int = 4, max_len: int = 256,
                  chunk: int = 16, eos_id: Optional[int] = None,
                  cache_budget: Optional[int] = None,
+                 evict_policy: str = "largest",
                  fault_policy: Optional[FaultPolicy] = None,
                  injector: Optional[FaultInjector] = None,
                  snapshot_every: int = 16,
@@ -237,6 +253,10 @@ class Engine(Server):
         self.chunk = int(chunk)
         self.eos_id = eos_id
         self.cache_budget = cache_budget
+        if evict_policy not in ("largest", "coldest"):
+            raise ValueError(f"unknown evict_policy {evict_policy!r}: "
+                             "expected 'largest' or 'coldest'")
+        self.evict_policy = evict_policy
         self.fault_policy = fault_policy or FaultPolicy()
         self.injector = FaultInjector.from_env() if injector is None \
             else injector
@@ -293,6 +313,7 @@ class Engine(Server):
             functools.partial(chunk_step, first=True), donate_argnums=(4,))
         self._chunk_cont = jax.jit(
             functools.partial(chunk_step, first=False), donate_argnums=(4,))
+        self.begin([])  # stats()/adopt() are valid before the first run
 
     @classmethod
     def restart(cls, cfg, mesh, ckpt_dir, **kw):
@@ -404,7 +425,7 @@ class Engine(Server):
             counters["degraded_iters"] += 1
         self._iter += 1
 
-    def _poisoned(self, i: int, queue: list):
+    def _poisoned(self, i: int):
         """Failure model (b), after bisection: slot ``i``'s row went
         non-finite.  Only this slot is evicted; its request re-queues
         through ``match_round`` and resumes from its last snapshot (or a
@@ -412,7 +433,7 @@ class Engine(Server):
         clean run's."""
         req = self.slots[i].req
         self.slots[i] = _Slot()
-        queue.append(req)
+        self.queue.append(req)
         self.scheduler.counters["slots_poisoned"] += 1
         self._note_fault()
         log.warning("poisoned slot %d: evicted uid=%d for replay", i,
@@ -446,17 +467,18 @@ class Engine(Server):
         return stop
 
     # -- engine loop ---------------------------------------------------------
-    def _admit(self, queue: list):
+    def _admit(self):
         # degradation shrinks the admissible slot range; occupants above the
         # limit keep running until they finish on their own
         idle = [i for i, s in enumerate(self.slots[:self._active_limit])
                 if s.state == "empty"]
-        if not idle or not queue:
+        if not idle or not self.queue:
             return
-        matched = self.scheduler.assign(idle, queue, self._work_remaining)
+        matched = self.scheduler.assign(idle, self.queue,
+                                        self._work_remaining)
         # pop in descending queue order so earlier indices stay valid
         for slot_id, qidx in sorted(matched, key=lambda m: -m[1]):
-            req = queue.pop(qidx)
+            req = self.queue.pop(qidx)
             snap = self._snaps.get(req.uid)
             if snap is not None:
                 # resume from the last row snapshot: restore the row slices
@@ -469,10 +491,12 @@ class Engine(Server):
                 self.slots[slot_id] = _Slot(req=req, state="decode",
                                             filled=snap["pos"],
                                             pos=snap["pos"],
-                                            last_token=snap["last"])
+                                            last_token=snap["last"],
+                                            last_step=self._iter)
                 self.scheduler.counters["snapshot_restores"] += 1
                 continue
             self.slots[slot_id] = _Slot(req=req, state="prefill", filled=0,
+                                        last_step=self._iter,
                                         prompt=self._effective_prompt(req))
             # the row's per-row lengths/validity reset here; slabs are NOT
             # zeroed — write-before-attend makes stale tokens unreachable
@@ -522,6 +546,7 @@ class Engine(Server):
             for i in group:
                 slot = self.slots[i]
                 slot.filled += int(lens[i])
+                slot.last_step = self._iter
                 if slot.filled >= len(slot.prompt):
                     slot.state = "decode"
                     slot.pos = len(slot.prompt)
@@ -530,7 +555,7 @@ class Engine(Server):
                     slot.last_token = tok
                     self._emit(i, tok)
 
-    def _decode_step(self, queue: list):
+    def _decode_step(self):
         """One batched per-row decode step over every decoding slot.  Rows
         not decoding still ride along (fixed shapes — no recompile): their
         garbage k/v writes park at the next position their own prefill (or
@@ -559,25 +584,29 @@ class Engine(Server):
         self._n_decode_steps += 1
         for i in decoding:
             if not ok[i]:
-                self._poisoned(i, queue)
+                self._poisoned(i)
                 continue
             s = self.slots[i]
             s.pos += 1
+            s.last_step = self._iter
             tok = int(nxt[i])
             s.last_token = tok
             if (not self._emit(i, tok) and self.snapshot_every
                     and len(s.req.out) % self.snapshot_every == 0):
                 self._take_snapshot(i)
 
-    def _apply_pressure(self, queue: list):
+    def _apply_pressure(self):
         """Evict while the host-mirrored live-context total exceeds
-        ``cache_budget`` and more than one slot is active: the
-        largest-context slot releases, its request re-queued with generated
-        tokens folded into the prompt (replayed exactly under greedy
-        decode) — or, when the request holds a row snapshot, resumed from
-        it at re-admission (host-staged, so it costs no budget).  A lone
-        active slot never evicts — progress is guaranteed whatever the
-        budget."""
+        ``cache_budget`` and more than one slot is active.  The victim is
+        the ``evict_policy`` pick — ``largest`` (default): the
+        largest-context slot, the budget-greedy choice; ``coldest``: the
+        least-recently-progressed slot by its ``last_step`` stamp, the
+        recency choice that spares hot decode lanes.  Either way the
+        request re-queues with generated tokens folded into the prompt
+        (replayed exactly under greedy decode) — or, when the request
+        holds a row snapshot, resumes from it at re-admission
+        (host-staged, so it costs no budget).  A lone active slot never
+        evicts — progress is guaranteed whatever the budget."""
         if self.cache_budget is None:
             return
         while True:
@@ -586,18 +615,26 @@ class Engine(Server):
             if (len(active) <= 1
                     or sum(c for c, _ in active) <= self.cache_budget):
                 return
-            _, victim = max(active)
+            if self.evict_policy == "coldest":
+                _, victim = min((self.slots[i].last_step, i)
+                                for _, i in active)
+            else:
+                _, victim = max(active)
             req = self.slots[victim].req
             self.slots[victim] = _Slot()
-            queue.append(req)
+            self.queue.append(req)
             self.scheduler.counters["pressure_evictions"] += 1
 
-    def run(self, requests: list[Request]) -> dict:
-        """Serve ``requests`` to completion with continuous batching; greedy
-        decode.  Returns wall/tokens/telemetry; per-request tokens land in
-        ``request.out`` (identical to running each request alone through the
-        lockstep path)."""
-        queue = list(requests)
+    # -- step API (the fleet tier's seam) ------------------------------------
+    def begin(self, requests: list[Request] = ()):
+        """Start a serving run: reset per-run scheduler/cache/fault state
+        and queue ``requests``.  ``begin``/``step``/``busy``/``finish`` are
+        the seam the fleet tier (``repro.launch.router``) drives — it
+        interleaves :meth:`step` across replicas and moves requests between
+        them with :meth:`drain_slot`/:meth:`adopt`/:meth:`salvage`;
+        :meth:`run` composes the same four calls for the single-replica
+        path."""
+        self.queue: list[Request] = list(requests)
         self.scheduler = SlotScheduler(self.max_batch)  # per-run telemetry
         self.slots = [_Slot() for _ in range(self.max_batch)]
         self.cache = self.model.init_cache(self.max_batch, self.max_len)
@@ -608,29 +645,157 @@ class Engine(Server):
         # re-seeds (reproducible delay sequence), snapshots/degradation
         # start clean
         self._launch_seq = {"decode": 0, "prefill": 0}
-        injected_before = self.injector.counters["faults_injected"]
+        self._injected_before = self.injector.counters["faults_injected"]
         self._fault_rng = self.fault_policy.make_rng()
         self._snaps: dict[int, dict] = {}
         self._recent_faults: list[int] = []
         self._iter = 0
         self._last_fault_iter = -(10 ** 9)
         self._active_limit = self.max_batch
+        self.busy_s = 0.0
+        self._t0 = time.time()
 
+    def busy(self) -> bool:
+        """True while this replica still owes work: queued requests or any
+        occupied slot."""
+        return bool(self.queue) or any(s.state != "empty"
+                                       for s in self.slots)
+
+    def step(self):
+        """One engine iteration: admit, batched prefill chunks, batched
+        per-row decode, pressure eviction, degradation bookkeeping.  Wall
+        time accrues to this replica's ``busy_s`` clock — in production
+        each replica is its own accelerator, so the fleet makespan is the
+        max of these clocks, which is how the router reports fleet
+        throughput when replicas time-share one test device."""
         t0 = time.time()
         with self.mesh, axis_rules(self.rules, self.mesh):
-            while queue or any(s.state != "empty" for s in self.slots):
-                self._admit(queue)
-                self._advance_prefill()
-                if any(s.state == "decode" for s in self.slots):
-                    self._decode_step(queue)
-                self._apply_pressure(queue)
-                self._update_degradation()
+            self._admit()
+            self._advance_prefill()
+            if any(s.state == "decode" for s in self.slots):
+                self._decode_step()
+            self._apply_pressure()
+            self._update_degradation()
+        self.busy_s += time.time() - t0
+
+    def finish(self) -> dict:
+        """Seal the run's counters (the injected-fault mirror lands in the
+        telemetry) and return the final :meth:`stats` view."""
         self.scheduler.counters["faults_injected"] = (
-            self.injector.counters["faults_injected"] - injected_before)
-        dt = time.time() - t0
+            self.injector.counters["faults_injected"]
+            - self._injected_before)
+        return self.stats()
+
+    def stats(self) -> dict:
+        """The engine's structured observability surface — scheduler
+        counters, fault counters (``runtime.fault_tolerance`` keys), the
+        degradation-window state, slot occupancy, and the remaining-work
+        load signal.  The router's health scoring and load shedding read
+        THIS, never private attributes; live mid-run reads are supported
+        (the injected-fault mirror refreshes here)."""
+        counters = self.scheduler.counters
+        counters["faults_injected"] = (
+            self.injector.counters["faults_injected"]
+            - self._injected_before)
+        faults = export_fault_counters(counters)
+        return {
+            "scheduler": {k: v for k, v in counters.items()
+                          if k not in faults},
+            "faults": faults,
+            "degradation": {
+                "active_limit": self._active_limit,
+                "max_batch": self.max_batch,
+                "degraded": self._active_limit < self.max_batch,
+                "recent_fault_events": len(self._recent_faults),
+                "iter": self._iter,
+            },
+            "occupancy": {
+                "queued": len(self.queue),
+                "prefilling": sum(s.state == "prefill" for s in self.slots),
+                "decoding": sum(s.state == "decode" for s in self.slots),
+                "free": sum(s.state == "empty" for s in self.slots),
+            },
+            "work_remaining": self.work_remaining_total(),
+            "launches": dict(self._launch_seq),
+            "busy_s": self.busy_s,
+            "decode_compilations": self._decode_rows._cache_size(),
+        }
+
+    # -- fleet-tier request movement -----------------------------------------
+    def work_remaining_total(self) -> int:
+        """Queued + in-flight work remaining — the router's load signal
+        (same units as the PWS admission priority)."""
+        w = sum(self._work_remaining(r) for r in self.queue)
+        for s in self.slots:
+            if s.req is not None:
+                w += self._work_remaining(s.req, s.context)
+        return w
+
+    def drain_slot(self, i: int, fresh: bool = True) -> \
+            tuple[Request, Optional[dict]]:
+        """Fleet-tier release of slot ``i`` (migration or replica leave):
+        frees the slot and returns ``(request, resume_snapshot_or_None)``.
+        A live drain of a decoding row stages a FRESH snapshot first, so
+        migration never rolls the request behind its current position —
+        without that, a migration per round could re-lose exactly the
+        token each round gains (no fleet progress).  ``fresh=False`` is
+        the death path (``salvage``): the device may be gone, so re-entry
+        falls back to the last cadence snapshot (plus the post-snapshot
+        greedy tail) or, with none staged, replays the effective prompt —
+        token-exact either way."""
+        s = self.slots[i]
+        req = s.req
+        if fresh and s.state == "decode":
+            self._take_snapshot(i)
+        snap = self._snaps.pop(req.uid, None)
+        self.slots[i] = _Slot()
+        self.scheduler.counters["drains"] += 1
+        return req, snap
+
+    def withdraw_queued(self, qidx: int) -> tuple[Request, Optional[dict]]:
+        """Fleet-tier removal of queued request ``qidx`` (rebalancing): no
+        cache state moves — just the request and any staged snapshot it
+        carries from an earlier residency."""
+        req = self.queue.pop(qidx)
+        return req, self._snaps.pop(req.uid, None)
+
+    def adopt(self, req: Request, snap: Optional[dict] = None):
+        """Accept a request routed (or migrated) to this replica.  ``snap``
+        is a host-staged resume entry whose row may have been captured on a
+        DIFFERENT replica — row slices carry no slot or replica identity,
+        but the layout must match, so it is validated against this
+        engine's cache before staging."""
+        if snap is not None:
+            dcache.snapshot_compatible(self.cache, snap["row"])
+            self._snaps[req.uid] = snap
+        self.queue.append(req)
+
+    def salvage(self) -> list[tuple[Request, Optional[dict]]]:
+        """Everything this replica still owes, for router-wide re-queue
+        after a death or a leave: queued then slotted requests, each with
+        its last host-staged snapshot when one exists (host memory
+        survives device loss).  Leaves the engine empty."""
+        out = [(r, self._snaps.pop(r.uid, None)) for r in self.queue]
+        self.queue = []
+        for i, s in enumerate(self.slots):
+            if s.req is not None:
+                out.append(self.drain_slot(i, fresh=False))
+        return out
+
+    def run(self, requests: list[Request]) -> dict:
+        """Serve ``requests`` to completion with continuous batching; greedy
+        decode.  Returns wall/tokens/telemetry; per-request tokens land in
+        ``request.out`` (identical to running each request alone through the
+        lockstep path)."""
+        self.begin(requests)
+        while self.busy():
+            self.step()
+        stats = self.finish()
+        dt = time.time() - self._t0
         n_tokens = sum(len(r.out) for r in requests)
         return {
             "wall_s": dt,
+            "busy_s": self.busy_s,
             "tokens": n_tokens,
             "tok_per_s": n_tokens / max(dt, 1e-9),
             "decode_steps": self._n_decode_steps,
@@ -638,6 +803,7 @@ class Engine(Server):
             "prefill_chunk_rows": self._n_chunk_rows,
             "completed": {r.uid: len(r.out) for r in self._completed},
             "telemetry": dict(self.scheduler.counters),
+            "stats": stats,
         }
 
 
@@ -686,6 +852,11 @@ def main():
     ap.add_argument("--cache-budget", type=int, default=0,
                     help="total live context tokens across slots before "
                          "pressure eviction kicks in (0 = unbounded)")
+    ap.add_argument("--evict-policy", default="largest",
+                    choices=("largest", "coldest"),
+                    help="pressure-eviction victim: largest context "
+                         "(default) or coldest = least-recently-progressed "
+                         "slot by its last-step stamp")
     ap.add_argument("--check-lockstep", action="store_true",
                     help="re-run each request alone through the lockstep "
                          "path and assert row-for-row token parity")
@@ -714,6 +885,7 @@ def main():
     engine = Engine(cfg, mesh, max_batch=args.slots, max_len=128,
                     chunk=args.chunk, opts=RunOptions(),
                     cache_budget=args.cache_budget or None,
+                    evict_policy=args.evict_policy,
                     injector=(FaultInjector(args.inject) if args.inject
                               else None),
                     snapshot_every=args.snapshot_every)

@@ -37,7 +37,12 @@ The lockstep server has NO failure handling by design — it is the simple
 baseline and the parity oracle.  Fault injection, bounded launch retry,
 row snapshots, and graceful degradation live in ``repro.launch.engine``
 (see its "Failure model" section); ``REPRO_FAULTS`` / ``--inject`` plans
-target the engine only.
+target the engine only.  The serving stack stacks in three tiers: this
+``Server`` (lockstep oracle) → ``repro.launch.engine.Engine`` (continuous
+batching + single-replica fault tolerance) → ``repro.launch.router.Router``
+(a data-parallel fleet of engines with randomized-stealing routing,
+replica death/respawn, and elastic join/leave) — each tier's guarantee is
+token-identity with the tier below it.
 """
 from __future__ import annotations
 

@@ -57,6 +57,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _register(cls, data_fields, meta_fields=()):
@@ -359,6 +360,34 @@ def restore_row(cache, i: int, snap):
     cursors, int8 scales, frozen cross-KV, recurrent state and its validity
     all land, so the row resumes exactly at its snapshot point."""
     return set_slot(cache, i, snap)
+
+
+def snapshot_compatible(cache, snap) -> None:
+    """The cross-replica portability gate: validate that a host-staged
+    :func:`snapshot_row` can restore into ``cache`` — same composite
+    structure, every leaf matching the cache's own b=1 row slice in shape
+    and dtype.  Row slices carry no slot or replica identity, so a
+    snapshot taken on one replica restores into ANY replica built from the
+    same serving config; a mismatch (different ``max_len``, window,
+    quantization, or family) must fail loudly here, not corrupt a row.
+    Raises ``ValueError`` naming the first mismatch; cost is abstract-only
+    (``eval_shape`` — no device work)."""
+    ref = jax.eval_shape(lambda: slot(cache, 0))
+    ref_leaves, ref_def = jax.tree_util.tree_flatten(ref)
+    snap_leaves, snap_def = jax.tree_util.tree_flatten(snap)
+    if ref_def != snap_def:
+        raise ValueError(
+            f"snapshot layout mismatch: cache rows are {ref_def}, "
+            f"snapshot is {snap_def}")
+    for r, s in zip(ref_leaves, snap_leaves):
+        if tuple(r.shape) != tuple(np.shape(s)):
+            raise ValueError(
+                f"snapshot row shape mismatch: cache row leaf {r.shape} "
+                f"vs snapshot leaf {np.shape(s)}")
+        if jnp.dtype(r.dtype) != jnp.dtype(np.asarray(s).dtype):
+            raise ValueError(
+                f"snapshot row dtype mismatch: cache row leaf {r.dtype} "
+                f"vs snapshot leaf {np.asarray(s).dtype}")
 
 
 def lengths(cache):

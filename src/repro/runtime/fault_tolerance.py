@@ -37,6 +37,41 @@ log = logging.getLogger(__name__)
 
 FAULT_PLAN_ENV = "REPRO_FAULTS"
 
+# The engine's fault-telemetry counter names, in one place so every consumer
+# (Engine.stats(), the router's health score, benches) slices the same keys
+# out of the scheduler's counter dict instead of hard-coding its layout.
+FAULT_COUNTER_KEYS = (
+    "retries", "faults_injected", "slots_poisoned", "snapshots_taken",
+    "snapshot_restores", "stragglers", "degradations", "degraded_iters",
+)
+
+
+def export_fault_counters(counters: dict) -> dict:
+    """The fault-tolerance slice of an engine's telemetry counters (missing
+    keys read as 0 — a counter dict from an older engine stays valid)."""
+    return {k: counters.get(k, 0) for k in FAULT_COUNTER_KEYS}
+
+
+def parse_fleet_plan(plan: str, n_replicas: int) -> list[str]:
+    """Split a fleet fault plan into per-replica engine plans.  The fleet
+    grammar is ``plan[|plan...]`` — ``|``-separated positional per-replica
+    plans (position = replica id, missing tails empty), e.g.
+    ``|decode@4=raise:99`` faults replica 1 only.  A plan with no ``|``
+    applies to EVERY replica, matching single-engine semantics.  Each piece
+    is validated through :func:`parse_fault_plan`."""
+    if "|" in plan:
+        pieces = [p.strip() for p in plan.split("|")]
+        if len(pieces) > n_replicas:
+            raise ValueError(
+                f"fleet fault plan names {len(pieces)} replicas but the "
+                f"router has {n_replicas}")
+        pieces += [""] * (n_replicas - len(pieces))
+    else:
+        pieces = [plan] * n_replicas
+    for piece in pieces:
+        parse_fault_plan(piece)
+    return pieces
+
 
 class InjectedFault(RuntimeError):
     """A fault raised by :class:`FaultInjector` (distinguishable from real

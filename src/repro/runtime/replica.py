@@ -1,0 +1,109 @@
+"""Replica lifecycle for the fleet tier: spawn, health, death, respawn.
+
+A *replica* is one serving :class:`~repro.launch.engine.Engine` plus the
+fleet-side bookkeeping the router (``repro.launch.router``) needs: an id,
+a live/dead/left state, how it was born (fresh init vs checkpoint-streamed
+:meth:`Engine.restart`), and a health score folded from the engine's PR-9
+fault counters.  The module is deliberately engine-agnostic at import time
+(lazy imports) so ``repro.runtime`` keeps no top-level dependency on
+``repro.launch`` — the same layering rule that keeps the simulator core
+below the serving stack.
+
+Health is signal-driven, not guessed: :func:`health_score` reads the
+``faults`` slice of ``Engine.stats()`` (``retries``, ``stragglers``,
+``degradations``, ``degraded_iters`` — the counters the degradation window
+already maintains) and maps it into ``[0, 1]``.  The router sheds load
+away from replicas under ``SHED_THRESHOLD``; the weights are sized so that
+isolated stragglers never cross it (placement stays deterministic under
+benign jitter) while a degradation event or a retry burst does.
+"""
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass, field
+from typing import Optional
+
+log = logging.getLogger("repro.replica")
+
+# health = 1 - sum(weight * counter), clamped to [0, 1].  degradations are
+# the strongest signal (the engine already judged the fault rate unhealthy);
+# retries mean launches are failing; stragglers/degraded_iters are mild
+# per-event evidence so routine jitter stays comfortably above the shed bar.
+HEALTH_WEIGHTS = {
+    "retries": 0.15,
+    "stragglers": 0.02,
+    "degradations": 0.30,
+    "degraded_iters": 0.01,
+}
+SHED_THRESHOLD = 0.5
+
+
+def health_score(stats: dict) -> float:
+    """Fold an ``Engine.stats()`` dict into one load-shedding signal in
+    ``[0, 1]`` (1 = healthy).  Reads only the structured ``faults`` slice —
+    no private engine attributes."""
+    faults = stats.get("faults", {})
+    score = 1.0
+    for key, w in HEALTH_WEIGHTS.items():
+        score -= w * float(faults.get(key, 0))
+    return max(0.0, min(1.0, score))
+
+
+@dataclass
+class Replica:
+    """One engine plus its fleet-side identity and state."""
+
+    rid: int
+    engine: object
+    state: str = "live"            # live | dead | left
+    spawned_from: str = "init"     # init | checkpoint
+    health: float = 1.0
+    stats: dict = field(default_factory=dict)
+
+    def refresh_health(self) -> float:
+        """Re-read the engine's stats and fold them into ``health``."""
+        self.stats = self.engine.stats()
+        self.health = health_score(self.stats)
+        return self.health
+
+    def shed(self) -> bool:
+        """True when the router should route new work away from here."""
+        return self.health < SHED_THRESHOLD
+
+    def provenance(self) -> dict:
+        """This replica's row in the router telemetry: identity, mesh,
+        kernel policy + autotune table provenance (per-replica — replicas
+        on different device kinds replay different tuned tables), and the
+        live health/fault picture."""
+        from repro.kernels import autotune as kernel_autotune
+        from repro.kernels import policy as kernel_policy
+
+        return {
+            "rid": self.rid,
+            "state": self.state,
+            "spawned_from": self.spawned_from,
+            "mesh": dict(self.engine.mesh.shape),
+            "policy": kernel_policy.current().describe(),
+            "autotune": kernel_autotune.provenance(),
+            "health": self.health,
+            "faults": dict(self.stats.get("faults", {})),
+        }
+
+
+def spawn_replica(rid: int, cfg, mesh, ckpt_dir=None, **engine_kw) -> Replica:
+    """Bring one replica up.  With ``ckpt_dir`` the spin-up is
+    checkpoint-streamed — params restore through
+    ``elastic.serving_restore`` onto ``mesh`` via :meth:`Engine.restart`,
+    so every replica of a fleet serves logits identical to the replica
+    whose params were checkpointed.  Without it the engine initializes
+    fresh (the fleet's replica 0, whose params seed the checkpoint)."""
+    from repro.launch.engine import Engine
+
+    if ckpt_dir is None:
+        rep = Replica(rid, Engine(cfg, mesh, **engine_kw))
+    else:
+        rep = Replica(rid, Engine.restart(cfg, mesh, ckpt_dir, **engine_kw),
+                      spawned_from="checkpoint")
+    log.info("replica %d up (%s, mesh %s)", rid, rep.spawned_from,
+             dict(mesh.shape))
+    return rep

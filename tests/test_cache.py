@@ -242,6 +242,34 @@ def test_snapshot_restores_into_different_slot():
                        jax.tree.map(jnp.zeros_like, dcache.slot(cache, 2)))
 
 
+def test_snapshot_compatible_gates_cross_replica_restore():
+    """The cross-replica portability gate the router leans on: a snapshot
+    restores into any same-config cache (accepted silently, eval_shape
+    only), while a different sequence capacity, a different KV dtype, or a
+    missing layout fails loudly with the mismatch named — never a corrupt
+    row."""
+    rng = np.random.default_rng(7)
+    cache = _rand_composite(rng)
+    snap = dcache.snapshot_row(cache, 1)
+    dcache.snapshot_compatible(cache, snap)     # same config: no raise
+    # shorter sequence axis, as from a replica built with a smaller max_len
+    short = jax.tree.map(
+        lambda x: x[:, :-1] if np.ndim(x) >= 2 and x.shape[1] > 1 else x,
+        snap)
+    with pytest.raises(ValueError, match="shape"):
+        dcache.snapshot_compatible(cache, short)
+    # quantization mismatch: f32 snapshot leaves downcast to f16
+    half = jax.tree.map(
+        lambda x: np.asarray(x, np.float16)
+        if np.asarray(x).dtype == np.float32 else x, snap)
+    with pytest.raises(ValueError, match="dtype"):
+        dcache.snapshot_compatible(cache, half)
+    # structural mismatch: a layout missing from the composite
+    with pytest.raises(ValueError, match="layout"):
+        dcache.snapshot_compatible(
+            cache, {k: v for k, v in snap.items() if k != "attn"})
+
+
 # -- layering: slab mutation stays inside repro.models.cache ------------------
 
 _FORBIDDEN = [

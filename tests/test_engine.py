@@ -146,7 +146,53 @@ def test_engine_decode_compiles_once(mesh):
     ragged composition of slot depths the run produces."""
     engine, _, out = _run_and_check(mesh, chunk=8)
     assert out["decode_steps"] > 1
-    assert engine._decode_rows._cache_size() == 1
+    assert engine.stats()["decode_compilations"] == 1
+
+
+# -- eviction policy + structured stats ---------------------------------------
+
+@pytest.mark.parametrize("evict", ["largest", "coldest"])
+def test_engine_evict_policy_replays_exactly(mesh, evict):
+    """Both pressure-eviction policies — ``largest`` (most cache rows) and
+    ``coldest`` (stalest ``last_step`` stamp) — replay the evicted request
+    token-exactly: the victim choice is a scheduling decision, never a
+    numerics one."""
+    cfg = get_smoke_config("qwen3-1.7b")
+    engine = Engine(cfg, mesh, max_batch=3, max_len=64, chunk=8,
+                    cache_budget=40, evict_policy=evict, opts=RunOptions())
+    reqs = _requests(6, vocab=cfg.vocab_size)
+    out = engine.run(reqs)
+    assert out["telemetry"]["pressure_evictions"] >= 1
+    assert check_lockstep_parity(engine, reqs)
+    assert all(len(r.out) == r.max_new for r in reqs)
+
+
+def test_engine_evict_policy_validated(mesh):
+    cfg = get_smoke_config("qwen3-1.7b")
+    with pytest.raises(ValueError):
+        Engine(cfg, mesh, max_batch=2, max_len=32, chunk=8,
+               evict_policy="newest", opts=RunOptions())
+
+
+def test_engine_stats_structure(mesh):
+    """``Engine.stats()`` is the public telemetry surface: consumers (the
+    router, benchmarks, these tests) read it instead of private fields.
+    The occupancy slices tile max_batch, fault counters carry every PR-9
+    key, and the scheduler slice excludes them (no double counting)."""
+    from repro.runtime import FAULT_COUNTER_KEYS
+    engine, reqs, out = _run_and_check(mesh, chunk=8)
+    stats = engine.stats()
+    assert stats is not out["stats"]            # fresh dict per call
+    occ = stats["occupancy"]
+    assert occ["prefilling"] + occ["decoding"] + occ["free"] == \
+        engine.max_batch
+    assert occ["queued"] == 0 and stats["work_remaining"] == 0  # drained
+    assert set(FAULT_COUNTER_KEYS) <= set(stats["faults"])
+    assert not set(FAULT_COUNTER_KEYS) & set(stats["scheduler"])
+    assert stats["launches"]["decode"] > 0 and stats["busy_s"] > 0
+    assert stats["decode_compilations"] == 1
+    deg = stats["degradation"]
+    assert deg["active_limit"] == deg["max_batch"] == engine.max_batch
 
 
 # -- SlotScheduler (no model) -------------------------------------------------

@@ -226,7 +226,9 @@ def test_engine_degradation_shrinks_and_heals(mesh):
     tel = out["telemetry"]
     assert tel["degradations"] >= 1
     assert tel["degraded_iters"] >= 1
-    assert engine._active_limit == engine.max_batch  # healed by run end
+    deg = engine.stats()["degradation"]
+    assert deg["active_limit"] == deg["max_batch"]   # healed by run end
+    assert not deg["degraded"]
     assert check_lockstep_parity(engine, reqs)
 
 
